@@ -1,0 +1,47 @@
+"""Paper Fig. 5 (AWS overlay testbed) — including its NEGATIVE result.
+
+On real-network (WAN-ish) conditions the paper finds CoARESF reads do NOT
+beat CoARES: every block read pays the configuration-discovery round-trips
+serially ("a stable overhead for each block request", §VII-D). We reproduce
+that with the AWS latency model (5-25 ms base delay), and show the
+parallel-index variant recovers the win.
+"""
+from __future__ import annotations
+
+from repro.core.store import DSS, DSSParams
+from repro.net.sim import LatencyModel
+
+from benchmarks.common import run_workload
+
+AWS_LAT = LatencyModel(base_lo=5e-3, base_hi=25e-3, bandwidth=60e6)
+
+
+def _dss(alg, indexed=False, seed=23):
+    return DSS(DSSParams(
+        algorithm=alg, n_servers=6, parity_m=4, seed=seed,
+        min_block=1 << 17, avg_block=1 << 18, max_block=1 << 20,
+        latency=AWS_LAT, indexed=indexed,
+    ))
+
+
+def run() -> list[dict]:
+    rows = []
+    for alg, indexed, label in [
+        ("coabd", False, "coabd"),
+        ("coabdf", False, "coabdf"),
+        ("coaresec", False, "coaresec"),
+        ("coaresecf", False, "coaresecf"),
+        ("coaresecf", True, "coaresecf+pidx"),
+    ]:
+        for size in (1 << 21, 1 << 23):
+            dss = _dss(alg, indexed=indexed)
+            res = run_workload(dss, file_size=size, n_writers=1, n_readers=1,
+                               ops_each=4, seed=size % 89)
+            rows.append({"bench": "aws_filesize", "algorithm": label,
+                         "file_size": size, **res.row()})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,39 @@
+"""Paper Fig. 11/12 — latency vs FM block sizes (fragmented algorithms).
+
+Min/avg block swept with max fixed (Fig 11 analogue), then a joint
+min/avg/max sweep on a larger file (Fig 12 analogue). 1:16 scale.
+"""
+from __future__ import annotations
+
+from benchmarks.common import make_dss, run_workload
+
+ALGOS = ["coabdf", "coaresabdf", "coaresecf"]
+
+
+def run() -> list[dict]:
+    rows = []
+    size = 1 << 22  # 4 MiB (paper: 4 MB)
+    for alg in ALGOS:
+        for blk in (1 << 13, 1 << 15, 1 << 17, 1 << 18, 1 << 20):
+            dss = make_dss(alg, n_servers=11,
+                           parity=1 if "ec" in alg else 1, seed=11,
+                           block=(blk // 2, blk, 1 << 21))
+            res = run_workload(dss, file_size=size, n_writers=2, n_readers=2,
+                               ops_each=4, seed=blk)
+            rows.append({"bench": "blocksize_minavg", "algorithm": alg,
+                         "avg_block": blk, **res.row()})
+    big = 1 << 24  # 16 MiB (paper: 512 MB)
+    for alg in ALGOS:
+        for blk in (1 << 16, 1 << 18, 1 << 20, 1 << 22):
+            dss = make_dss(alg, n_servers=11, parity=1, seed=13,
+                           block=(blk // 2, blk, 4 * blk))
+            res = run_workload(dss, file_size=big, n_writers=2, n_readers=2,
+                               ops_each=3, seed=blk)
+            rows.append({"bench": "blocksize_joint", "algorithm": alg,
+                         "avg_block": blk, **res.row()})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,36 @@
+"""Paper Fig. 4/5 — operation latency vs initial file size, six algorithms
+(+ §VI: EC-DAP vs EC-DAPopt lines). Sizes scaled 1:64 vs the paper's
+1MB-512MB (virtual network, identical trends); block sizes scaled alike.
+"""
+from __future__ import annotations
+
+from benchmarks.common import make_dss, run_workload
+
+ALGOS = ["coabd", "coabdf", "coaresabd", "coaresabdf", "coaresec", "coaresecf",
+         "coaresec-noopt", "coaresecf-noopt"]
+SIZES = [1 << 20, 1 << 21, 1 << 22, 1 << 23, 1 << 24]  # 1MB..16MB (1:32 of paper)
+
+
+def run() -> list[dict]:
+    rows = []
+    for alg in ALGOS:
+        for size in SIZES:
+            dss = make_dss(alg, n_servers=11,
+                           parity=5 if "ec" in alg else 1, seed=7)
+            res = run_workload(dss, file_size=size, n_writers=2, n_readers=2,
+                               ops_each=4, seed=size % 97)
+            rows.append({"bench": "filesize", "algorithm": alg,
+                         "file_size": size, **res.row()})
+    # beyond-paper: CoARESECF with the parallel block index (§Perf storage)
+    for size in SIZES:
+        dss = make_dss("coaresecf", n_servers=11, parity=5, seed=7, indexed=True)
+        res = run_workload(dss, file_size=size, n_writers=2, n_readers=2,
+                           ops_each=4, seed=size % 97)
+        rows.append({"bench": "filesize", "algorithm": "coaresecf+pidx",
+                     "file_size": size, **res.row()})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

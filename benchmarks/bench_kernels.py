@@ -1,0 +1,83 @@
+"""Kernel-layer benchmarks: GF(256) RS encode + gear-hash CDC.
+
+Wall-time here is the jit'd pure-jnp path on CPU (the Pallas kernel targets
+TPU; interpret mode is a correctness harness, not a perf surface). The
+derived column reports the ANALYTIC v5e roofline for the bitsliced kernel:
+arithmetic intensity 64*m*k/(k+m) FLOP/byte and the implied bandwidth- or
+MXU-bound throughput (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.erasure import RSCode
+from repro.kernels.cdc_gearhash.ops import gearhash
+from repro.kernels.gf256_matmul.ref import gf256_matmul_ref
+from repro.roofline.analysis import V5E
+
+
+def _time(fn, warmup=2, iters=5) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> list[dict]:
+    import jax
+
+    rows = []
+    for (n, k) in [(6, 4), (11, 6), (12, 10), (14, 10)]:
+        m = n - k
+        L = 1 << 20  # 1 MiB stripes
+        rng = np.random.default_rng(0)
+        data = rng.integers(0, 256, (k, L), dtype=np.uint8)
+        code = RSCode(n=n, k=k)
+        P = code.parity_matrix
+
+        jit_ref = jax.jit(lambda d: gf256_matmul_ref(P, d))
+        jit_ref(data).block_until_ready()
+        dt = _time(lambda: jit_ref(data).block_until_ready())
+        mb = k * L / 1e6
+        # analytic v5e roofline for the bitsliced MXU formulation
+        ai = 64.0 * m * k / (k + m)                      # FLOP per byte moved
+        bytes_moved = (k + m) * L
+        flops = 2.0 * (8 * m) * (8 * k) * L
+        t_mxu = flops / V5E.peak_flops
+        t_hbm = bytes_moved / V5E.hbm_bw
+        bound = "MXU" if t_mxu > t_hbm else "HBM"
+        tpu_gbps = k * L / max(t_mxu, t_hbm) / 1e9
+        rows.append({
+            "bench": "rs_encode", "n": n, "k": k,
+            "cpu_ref_MBps": mb / dt,
+            "v5e_intensity_flop_per_byte": round(ai, 1),
+            "v5e_bound": bound,
+            "v5e_GBps_per_chip": round(tpu_gbps, 1),
+        })
+    # decode (k-of-n with erasures -> inverse matmul, same kernel)
+    code = RSCode(n=12, k=10)
+    data = np.random.default_rng(1).integers(0, 256, (10, 1 << 20), dtype=np.uint8)
+    coded = code.encode(data)
+    keep = [0, 2, 3, 4, 5, 6, 7, 8, 10, 11]
+    dt = _time(lambda: code.decode(coded[keep], keep), warmup=1, iters=3)
+    rows.append({"bench": "rs_decode", "n": 12, "k": 10,
+                 "cpu_MBps": 10 * (1 << 20) / 1e6 / dt})
+    # CDC gear hash
+    blob = np.random.default_rng(2).integers(0, 256, 1 << 22, dtype=np.uint8)
+    h, b = gearhash(blob)  # jit'd ref path on CPU
+    import jax
+
+    dt = _time(lambda: jax.block_until_ready(gearhash(blob)))
+    rows.append({"bench": "cdc_gearhash", "cpu_MBps": len(blob) / 1e6 / dt,
+                 "v5e_bound": "HBM",
+                 "v5e_GBps_per_chip": round(V5E.hbm_bw / 6 / 1e9, 1)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

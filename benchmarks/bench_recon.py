@@ -1,0 +1,35 @@
+"""Paper Fig. 8/9/10 — R/W latency under live reconfigurations.
+
+Scenarios: (same) recon to identical DAP; (random) DAP flips; (mixed)
+DAP flips + server-count changes — with concurrent readers/writers, for both
+CoARES and CoARESF variants.
+"""
+from __future__ import annotations
+
+from benchmarks.common import make_dss, run_workload
+
+SCENARIOS = {
+    "same": [("ec_opt", 11)] * 3,
+    "random_dap": [("abd", 11), ("ec_opt", 11), ("abd", 11)],
+    "dap_and_servers": [("abd", 7), ("ec_opt", 9), ("abd", 5)],
+}
+
+
+def run() -> list[dict]:
+    rows = []
+    for alg in ("coaresec", "coaresecf", "coaresabd", "coaresabdf"):
+        for scen, plan in SCENARIOS.items():
+            dss = make_dss(alg, n_servers=11, parity=5 if "ec" in alg else 1,
+                           seed=17)
+            res = run_workload(
+                dss, file_size=1 << 22, n_writers=2, n_readers=2, ops_each=4,
+                recons=len(plan), recon_int=0.03, recon_plan=plan, seed=19,
+            )
+            rows.append({"bench": f"recon_{scen}", "algorithm": alg,
+                         **res.row()})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,45 @@
+"""Paper Fig. 6/7 — latency vs number of participants.
+
+Sweeps servers {3,5,7,9,11} with paper-matched parity (m grows with n to
+hold fault tolerance), and writers/readers {1,3,5} with the other fixed.
+File 256 KiB (1:16 of the paper's 4 MB).
+"""
+from __future__ import annotations
+
+from benchmarks.common import make_dss, run_workload
+
+PARITY = {3: 1, 5: 2, 7: 3, 9: 4, 11: 5}
+ALGOS = ["coabd", "coabdf", "coaresabd", "coaresabdf", "coaresec", "coaresecf"]
+
+
+def run() -> list[dict]:
+    rows = []
+    size = 1 << 22  # 4 MiB (paper uses 4 MB here)
+    for alg in ALGOS:
+        for n in (3, 5, 7, 9, 11):
+            dss = make_dss(alg, n_servers=n,
+                           parity=PARITY[n] if "ec" in alg else 1, seed=3)
+            res = run_workload(dss, file_size=size, n_writers=2, n_readers=2,
+                               ops_each=4, seed=n)
+            rows.append({"bench": "scal_servers", "algorithm": alg,
+                         "servers": n, **res.row()})
+        for nw in (1, 3, 5):
+            dss = make_dss(alg, n_servers=7,
+                           parity=3 if "ec" in alg else 1, seed=5)
+            res = run_workload(dss, file_size=size, n_writers=nw, n_readers=2,
+                               ops_each=3, seed=nw)
+            rows.append({"bench": "scal_writers", "algorithm": alg,
+                         "writers": nw, **res.row()})
+        for nr in (1, 3, 5):
+            dss = make_dss(alg, n_servers=7,
+                           parity=3 if "ec" in alg else 1, seed=6)
+            res = run_workload(dss, file_size=size, n_writers=2, n_readers=nr,
+                               ops_each=3, seed=nr)
+            rows.append({"bench": "scal_readers", "algorithm": alg,
+                         "readers": nr, **res.row()})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,149 @@
+"""Shared workload driver for the paper-figure benchmarks.
+
+Reproduces §VII-C's stochastic invocation scheme: each writer/reader picks a
+uniform-random think time in [0, int] between ops (virtual seconds), writers
+do read-modify-write edits of the shared file, readers read. All latencies
+are *virtual-time* (deterministic, seeded).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import DSS, DSSParams
+from repro.net.sim import LatencyModel
+
+
+@dataclass
+class WorkloadResult:
+    write_avg: float
+    read_avg: float
+    recon_avg: float
+    writes_ok: int
+    writes_total: int
+    reads: int
+    bytes_sent: float
+    virtual_end: float
+
+    def row(self) -> dict:
+        return {
+            "write_ms": self.write_avg * 1e3,
+            "read_ms": self.read_avg * 1e3,
+            "recon_ms": self.recon_avg * 1e3,
+            "write_success": self.writes_ok / max(1, self.writes_total),
+            "GB_sent": self.bytes_sent / 1e9,
+        }
+
+
+def make_dss(algorithm: str, n_servers: int, parity: int, seed: int,
+             block: tuple[int, int, int] = (1 << 17, 1 << 18, 1 << 20),
+             indexed: bool = False) -> DSS:
+    # Latency model calibrated to the paper's Emulab LAN: sub-ms base RTT,
+    # 1 Gbit/s — block transfers (2 ms at 256 KiB) dominate round trips,
+    # the same regime as the paper's 1 MB blocks.
+    lat = LatencyModel(base_lo=0.1e-3, base_hi=0.3e-3, bandwidth=125e6)
+    return DSS(DSSParams(
+        algorithm=algorithm, n_servers=n_servers, parity_m=parity, seed=seed,
+        min_block=block[0], avg_block=block[1], max_block=block[2],
+        latency=lat, indexed=indexed,
+    ))
+
+
+def run_workload(
+    dss: DSS,
+    *,
+    file_size: int,
+    n_writers: int = 2,
+    n_readers: int = 2,
+    ops_each: int = 5,
+    w_int: float = 0.01,
+    r_int: float = 0.01,
+    recons: int = 0,
+    recon_int: float = 0.05,
+    recon_plan=None,
+    seed: int = 0,
+) -> WorkloadResult:
+    rng = np.random.default_rng(seed)
+    doc = rng.integers(0, 256, file_size, dtype=np.uint8).tobytes()
+    boot = dss.client("boot")
+    dss.net.run_op(boot.update("f", doc), client="boot")
+    base_t = dss.net.now
+    futs = []
+
+    for wi in range(n_writers):
+        w = dss.client(f"w{wi}")
+
+        def wloop(w=w, wi=wi):
+            for op in range(ops_each):
+                yield from _sleep(dss, rng.uniform(0, w_int))
+                cur = yield from w.read("f")
+                buf = bytearray(cur)
+                if buf:
+                    pos = int(rng.integers(0, len(buf)))
+                    buf[pos] ^= 0xFF
+                yield from w.update("f", bytes(buf))
+            return True
+
+        futs.append(dss.net.spawn(wloop(), client=f"w{wi}"))
+
+    for ri in range(n_readers):
+        r = dss.client(f"r{ri}")
+
+        def rloop(r=r):
+            for op in range(ops_each):
+                yield from _sleep(dss, rng.uniform(0, r_int))
+                yield from r.read("f")
+            return True
+
+        futs.append(dss.net.spawn(rloop(), client=f"r{ri}"))
+
+    if recons:
+        g = dss.client("g")
+
+        def gloop():
+            for i in range(recons):
+                yield from _sleep(dss, recon_int)
+                if recon_plan:
+                    dap, n = recon_plan[i % len(recon_plan)]
+                    cfg = dss.make_config(dap=dap, n_servers=n)
+                else:
+                    cfg = dss.make_config()
+                yield from g.recon("f", cfg)
+            return True
+
+        futs.append(dss.net.spawn(gloop(), client="g"))
+
+    dss.net.run()
+    assert all(f.done for f in futs), "workload op failed to terminate"
+    wl, rl, gl = [], [], []
+    wok = wtot = nreads = 0
+    for rec in dss.history:
+        if rec.start < base_t:
+            continue
+        dur = rec.end - rec.start
+        if rec.kind in ("fm-update",) or (rec.kind == "write" and "ckpt" not in rec.obj):
+            if rec.kind == "fm-update" or rec.obj == "f":
+                wl.append(dur)
+                wtot += 1
+                wok += int(rec.flag == "chg" or (rec.extra or {}).get("success", False))
+        elif rec.kind in ("fm-read",) or (rec.kind == "read" and rec.obj == "f"):
+            rl.append(dur)
+            nreads += 1
+        elif rec.kind in ("fm-recon", "recon"):
+            gl.append(dur)
+    # for non-fragmented algorithms both "write" (block) and nothing else
+    return WorkloadResult(
+        write_avg=float(np.mean(wl)) if wl else 0.0,
+        read_avg=float(np.mean(rl)) if rl else 0.0,
+        recon_avg=float(np.mean(gl)) if gl else 0.0,
+        writes_ok=wok, writes_total=wtot, reads=nreads,
+        bytes_sent=dss.net.bytes_sent, virtual_end=dss.net.now,
+    )
+
+
+def _sleep(dss, dt):
+    from repro.net.sim import Sleep
+
+    yield Sleep(float(dt))
+    return None

@@ -1,0 +1,55 @@
+"""Quickstart: the paper's system in 60 lines.
+
+Spins up a CoARESF deployment (fragmented + erasure-coded + reconfigurable),
+writes a large object, does an incremental edit, survives server crashes,
+and live-reconfigures to a new server set — all on the deterministic
+virtual-time network.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import DSS, DSSParams
+
+# --- deploy: 8 servers, [n=8, k=6] Reed-Solomon, EC-DAPopt, fragmented -----
+dss = DSS(DSSParams(algorithm="coaresecf", n_servers=8, parity_m=2, seed=0,
+                    min_block=4096, avg_block=16384, max_block=65536))
+writer = dss.client("alice")
+reader = dss.client("bob")
+print(f"deployed CoARESECF: n={dss.c0.n} k={dss.c0.k} "
+      f"quorum={dss.c0.quorum()} tolerates {(dss.c0.n-dss.c0.k)//2} crashes")
+
+# --- write a 1 MB file -------------------------------------------------------
+rng = np.random.default_rng(0)
+doc = rng.integers(0, 256, 1 << 20, dtype=np.uint8).tobytes()
+stats = dss.net.run_op(writer.update("report.bin", doc), client="alice")
+print(f"write: {stats['blocks']} CDC blocks, all coded into n fragments "
+      f"(virtual latency baked into dss.net.now={dss.net.now*1e3:.1f} ms)")
+
+# --- read it back -------------------------------------------------------------
+got = dss.net.run_op(reader.read("report.bin"), client="bob")
+assert got == doc
+print(f"read: OK ({len(got)>>20} MiB, decoded from k-of-n fragments)")
+
+# --- incremental edit: only touched blocks rewrite ---------------------------
+edit = bytearray(doc)
+edit[500_000:500_016] = b"EDITED-IN-PLACE!"
+stats2 = dss.net.run_op(writer.update("report.bin", bytes(edit)), client="alice")
+print(f"edit: rewrote {stats2['written']}/{stats2['blocks']} blocks "
+      f"(rsync-style CDC — the paper's Fig.4 flat-write-latency effect)")
+
+# --- crash within the fault budget -------------------------------------------
+dss.crash_servers(["s7"])
+got2 = dss.net.run_op(reader.read("report.bin"), client="bob")
+assert got2 == bytes(edit)
+print("crash: s7 down, read still OK (EC quorum)")
+
+# --- live reconfiguration to a fresh server set + ABD DAP ---------------------
+g = dss.client("admin")
+new_cfg = dss.make_config(dap="abd", n_servers=5, fresh_servers=True)
+nblocks = dss.net.run_op(g.recon("report.bin", new_cfg), client="admin")
+print(f"recon: migrated {nblocks} blocks to 5 fresh servers under ABD "
+      f"(service stayed readable throughout)")
+got3 = dss.net.run_op(reader.read("report.bin"), client="bob")
+assert got3 == bytes(edit)
+print("read after recon: OK — done.")

@@ -1,0 +1,13 @@
+"""Batched decode serving demo (reduced config, CPU).
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+sys.argv = [sys.argv[0], "--arch", "qwen2_0_5b", "--batch", "4",
+            "--cache-len", "128", "--tokens", "24", *sys.argv[1:]]
+from repro.launch.serve import main
+
+out = main()
+assert out["tokens"].shape == (4, 24)
+print("example OK")

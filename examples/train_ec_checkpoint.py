@@ -1,0 +1,21 @@
+"""End-to-end driver: train an LM with EC-coded quorum checkpointing,
+crash the trainer AND two checkpoint hosts mid-run, restore, and finish.
+
+  PYTHONPATH=src python examples/train_ec_checkpoint.py [--steps 60]
+
+(Reduced gemma3-family config so it runs on CPU in ~a minute; pass
+``--arch``/``--full`` per launch/train.py for cluster-scale runs.)
+"""
+import sys
+
+sys.argv = [sys.argv[0], "--arch", "gemma3_1b", "--steps", "60",
+            "--ckpt-every", "20", "--crash-at", "45", "--kill-hosts", "2",
+            "--ckpt-hosts", "8", "--ckpt-parity", "4",
+            *sys.argv[1:]]
+from repro.launch.train import main
+
+out = main()
+losses = out["losses"]
+assert losses[-1] < losses[0], "training must make progress"
+print(f"example OK: loss {losses[0]:.3f} -> {losses[-1]:.3f}, "
+      f"{len(out['ckpts'])} quorum checkpoints, survived trainer+2-host crash")

@@ -1,0 +1,22 @@
+"""Assigned architecture configs (--arch <id>). Sources per config file."""
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, shapes_for
+
+_ARCH_IDS = [
+    "qwen2_vl_7b", "olmoe_1b_7b", "qwen3_moe_30b_a3b", "gemma3_1b",
+    "chatglm3_6b", "qwen3_0_6b", "qwen2_0_5b", "mamba2_2_7b",
+    "whisper_base", "zamba2_7b",
+]
+
+
+def get_arch(name: str) -> ArchConfig:
+    key = name.replace("-", "_").replace(".", "_")
+    if key not in _ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; have {_ARCH_IDS}")
+    import importlib
+
+    mod = importlib.import_module(f"repro.configs.{key}")
+    return mod.CONFIG
+
+
+def all_archs() -> dict[str, ArchConfig]:
+    return {a: get_arch(a) for a in _ARCH_IDS}

@@ -1,0 +1,26 @@
+"""The paper's contribution: CoARES, CoARESF, EC-DAP/EC-DAPopt (+ checkers)."""
+from repro.core.coares import CoAresClient, StaticCoverableClient
+from repro.core.fragment import FragmentationModule, decode_block_value, encode_block_value, genesis_id
+from repro.core.server import StorageServer
+from repro.core.store import ALGORITHMS, DSS, ClientHandle, DSSParams
+from repro.core.tags import TAG0, Config, CSeqEntry, OpRecord, Tag, next_tag
+
+__all__ = [
+    "CoAresClient",
+    "StaticCoverableClient",
+    "FragmentationModule",
+    "StorageServer",
+    "DSS",
+    "DSSParams",
+    "ClientHandle",
+    "ALGORITHMS",
+    "Config",
+    "CSeqEntry",
+    "OpRecord",
+    "Tag",
+    "TAG0",
+    "next_tag",
+    "genesis_id",
+    "encode_block_value",
+    "decode_block_value",
+]

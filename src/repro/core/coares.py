@@ -1,0 +1,248 @@
+"""CoARES (§IV, Algorithm 1) + ARES reconfiguration (§III) + static CoABD.
+
+All client operations are sim generators. ``CoAresClient`` maintains, per
+object: the configuration sequence ``cseq`` (list of CSeqEntry), the writer's
+``version`` tag (coverability state), and the EC-DAPopt local (c.tag, c.val)
+pairs (inside ``dap_state``).
+"""
+from __future__ import annotations
+
+from typing import Any, Generator
+
+from repro.core.dap.base import make_dap
+from repro.core.tags import TAG0, Config, CSeqEntry, F, OpRecord, P, Tag, digest, next_tag
+from repro.net.sim import RPC, Sleep
+
+
+class CoAresClient:
+    """A client process (reader / writer / reconfigurer) of CoARES."""
+
+    def __init__(self, net, client_id: str, initial_config: Config, history: list | None = None):
+        self.net = net
+        self.client_id = client_id
+        self.c0 = initial_config
+        self.cseq: dict[str, list[CSeqEntry]] = {}
+        self.version: dict[str, Tag] = {}   # writer coverability state
+        self.dap_state: dict = {}            # EC-DAPopt (c.tag, c.val) per (obj, cfg)
+        self.history = history if history is not None else []
+
+    # ------------------------------------------------------------- plumbing
+    def _cseq(self, obj: str) -> list[CSeqEntry]:
+        return self.cseq.setdefault(obj, [CSeqEntry(self.c0, F)])
+
+    def _dap(self, cfg: Config, idx: int):
+        return make_dap(self.net, self.client_id, cfg, idx, self.dap_state)
+
+    def _record(self, **kw) -> None:
+        self.history.append(OpRecord(**kw))
+
+    # ---------------------------------------------------- config discovery
+    def read_config(self, obj: str) -> Generator:
+        """Sequence traversal: follow nextC pointers from the last finalized
+        configuration until no successor is announced (§III)."""
+        cseq = self._cseq(obj)
+        i = max(j for j, e in enumerate(cseq) if e.status == F)
+        while True:
+            entry = cseq[i]
+            replies = yield RPC(
+                dests=entry.config.servers,
+                msg=("read-next", obj, i),
+                need=entry.config.majority(),
+            )
+            nxt = None
+            for r in replies.values():
+                cand = r[1]
+                if cand is None:
+                    continue
+                cfg, status = cand
+                if nxt is None or (status == F and nxt[1] == P):
+                    nxt = (cfg, status)
+            if nxt is None:
+                break
+            cfg, status = nxt
+            if i + 1 < len(cseq):
+                # configuration uniqueness: same config; maybe upgrade status
+                if status == F and cseq[i + 1].status == P:
+                    cseq[i + 1].status = F
+            else:
+                cseq.append(CSeqEntry(cfg, status))
+            i += 1
+        return cseq
+
+    # ------------------------------------------------------------ consensus
+    def _propose(self, obj: str, idx: int, cfg_here: Config, value: Config) -> Generator:
+        """Single-decree Paxos on the servers of ``cfg_here`` deciding the
+        configuration that follows index ``idx`` (c.Con of §II)."""
+        maj = cfg_here.majority()
+        n_attempt = 0
+        while True:
+            n_attempt += 1
+            ballot = (n_attempt, self.client_id)
+            replies = yield RPC(
+                dests=cfg_here.servers,
+                msg=("cons-p1", obj, idx, ballot),
+                need=maj,
+            )
+            oks = [r for r in replies.values() if r[0] == "p1-ok"]
+            if len(oks) < maj:
+                seen = max((r[1][0] for r in replies.values() if r[0] == "p1-nack"), default=0)
+                n_attempt = max(n_attempt, seen)
+                yield Sleep(float(self.net.rng.uniform(0.5e-3, 3e-3)) * n_attempt)
+                continue
+            # adopt the highest previously-accepted value, else our own
+            accepted = [(r[1], r[2]) for r in oks if r[1] is not None]
+            val = max(accepted, key=lambda bv: bv[0])[1] if accepted else value
+            replies2 = yield RPC(
+                dests=cfg_here.servers,
+                msg=("cons-p2", obj, idx, ballot, val),
+                need=maj,
+            )
+            if sum(1 for r in replies2.values() if r[0] == "p2-ok") >= maj:
+                return val
+            yield Sleep(float(self.net.rng.uniform(0.5e-3, 3e-3)) * n_attempt)
+
+    # ---------------------------------------------------------------- recon
+    def recon(self, obj: str, new_config: Config) -> Generator:
+        """ARES reconfiguration (§III): traverse, propose, transfer, finalize."""
+        t0 = self.net.now
+        cseq = yield from self.read_config(obj)
+        nu = len(cseq) - 1
+        last = cseq[nu]
+        # 1) agree on the successor of the last configuration
+        decided = yield from self._propose(obj, nu, last.config, new_config)
+        # 2) announce ⟨decided, P⟩ on a quorum of the last configuration
+        yield RPC(
+            dests=last.config.servers,
+            msg=("write-next", obj, nu, decided, P),
+            need=last.config.majority(),
+        )
+        if len(cseq) == nu + 1:
+            cseq.append(CSeqEntry(decided, P))
+        # 3) transfer the maximum tag-value pair into the new configuration
+        mu = max(j for j, e in enumerate(cseq) if e.status == F)
+        tag, val = TAG0, None
+        for j in range(mu, nu + 1):
+            t, v = yield from self._dap(cseq[j].config, j).get_data(obj)
+            if t >= tag:
+                tag, val = t, v
+        yield from self._dap(decided, nu + 1).put_data(obj, tag, val)
+        # 4) finalize on a quorum of the last old configuration
+        yield RPC(
+            dests=last.config.servers,
+            msg=("write-next", obj, nu, decided, F),
+            need=last.config.majority(),
+        )
+        cseq[nu + 1].status = F
+        self._record(
+            kind="recon", obj=obj, client=self.client_id, start=t0, end=self.net.now,
+            tag=tag, extra={"config": decided.cfg_id},
+        )
+        return decided
+
+    # ---------------------------------------------------------------- write
+    def cvr_write(self, obj: str, value: Any) -> Generator:
+        """Alg 1:10-32 — coverable write; degrades to a read when stale."""
+        t0 = self.net.now
+        cseq = yield from self.read_config(obj)                      # l.11
+        mu = max(j for j, e in enumerate(cseq) if e.status == F)     # l.12
+        nu = len(cseq) - 1                                           # l.13
+        tag, val = TAG0, None
+        for j in range(mu, nu + 1):                                  # l.14-15
+            t, v = yield from self._dap(cseq[j].config, j).get_data(obj)
+            if t >= tag:
+                tag, val = t, v
+        if self.version.get(obj, TAG0) == tag:                       # l.16
+            flag = "chg"
+            tag = next_tag(tag, self.client_id)                      # l.18
+            val = value
+        else:
+            flag = "unchg"                                           # l.20
+        self.version[obj] = tag                                      # l.21
+        # propagate until the configuration sequence is stable (l.22-30)
+        while True:
+            nu = len(cseq) - 1
+            yield from self._dap(cseq[nu].config, nu).put_data(obj, tag, val)
+            cseq = yield from self.read_config(obj)
+            if len(cseq) - 1 == nu:
+                break
+        self._record(
+            kind="write", obj=obj, client=self.client_id, start=t0, end=self.net.now,
+            tag=tag, flag=flag, value_digest=digest(val),
+        )
+        return (tag, val), flag
+
+    # ----------------------------------------------------------------- read
+    def cvr_read(self, obj: str) -> Generator:
+        """Alg 1:39-55."""
+        t0 = self.net.now
+        cseq = yield from self.read_config(obj)
+        mu = max(j for j, e in enumerate(cseq) if e.status == F)
+        nu = len(cseq) - 1
+        tag, val = TAG0, None
+        for j in range(mu, nu + 1):
+            t, v = yield from self._dap(cseq[j].config, j).get_data(obj)
+            if t >= tag:
+                tag, val = t, v
+        while True:
+            nu = len(cseq) - 1
+            yield from self._dap(cseq[nu].config, nu).put_data(obj, tag, val)
+            cseq = yield from self.read_config(obj)
+            if len(cseq) - 1 == nu:
+                break
+        self._record(
+            kind="read", obj=obj, client=self.client_id, start=t0, end=self.net.now,
+            tag=tag, value_digest=digest(val),
+        )
+        return tag, val
+
+
+class StaticCoverableClient:
+    """CoABD [21] (and a static-EC ablation): coverable reads/writes over one
+    fixed configuration — the paper's non-reconfigurable baselines."""
+
+    def __init__(self, net, client_id: str, config: Config, history: list | None = None):
+        self.net = net
+        self.client_id = client_id
+        self.config = config
+        self.version: dict[str, Tag] = {}
+        self.dap_state: dict = {}
+        self.history = history if history is not None else []
+
+    def _dap(self):
+        return make_dap(self.net, self.client_id, self.config, 0, self.dap_state)
+
+    def _record(self, **kw) -> None:
+        self.history.append(OpRecord(**kw))
+
+    def cvr_write(self, obj: str, value: Any) -> Generator:
+        t0 = self.net.now
+        dap = self._dap()
+        tag, val = yield from dap.get_data(obj)
+        if self.version.get(obj, TAG0) == tag:
+            flag = "chg"
+            tag = next_tag(tag, self.client_id)
+            val = value
+        else:
+            flag = "unchg"
+        self.version[obj] = tag
+        yield from dap.put_data(obj, tag, val)
+        self._record(
+            kind="write", obj=obj, client=self.client_id, start=t0, end=self.net.now,
+            tag=tag, flag=flag, value_digest=digest(val),
+        )
+        return (tag, val), flag
+
+    def cvr_read(self, obj: str) -> Generator:
+        t0 = self.net.now
+        dap = self._dap()
+        tag, val = yield from dap.get_data(obj)
+        yield from dap.put_data(obj, tag, val)
+        self._record(
+            kind="read", obj=obj, client=self.client_id, start=t0, end=self.net.now,
+            tag=tag, value_digest=digest(val),
+        )
+        return tag, val
+
+    def recon(self, obj: str, new_config: Config) -> Generator:
+        raise NotImplementedError("static algorithms do not reconfigure")
+        yield  # pragma: no cover

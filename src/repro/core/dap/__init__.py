@@ -1,0 +1,5 @@
+from repro.core.dap.base import DapClient, make_dap
+from repro.core.dap.abd import AbdDap
+from repro.core.dap.ec import EcDap
+
+__all__ = ["DapClient", "make_dap", "AbdDap", "EcDap"]

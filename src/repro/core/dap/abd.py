@@ -1,0 +1,76 @@
+"""ABD-DAP [6], [22] with the CoBFS [4] conditional-transfer optimization.
+
+get-data: read (tag, value) from a majority, return the max. Clients send
+their last-known tag; a server whose stored tag is not newer replies with
+``(tag, None)`` (tag-only) — "avoids unnecessary object transmissions
+between the clients and the servers" ([4], adopted by the paper's §VI as the
+inspiration for EC-DAPopt). The client serves repeated reads of unchanged
+blocks from its local copy, which is what makes CoABDF/CoARESABDF reads
+O(changed blocks) instead of O(file).
+
+put-data: write (tag, value) to a majority (servers keep the max).
+"""
+from __future__ import annotations
+
+from typing import Any, Generator
+
+from repro.core.dap.base import DapClient
+from repro.core.tags import TAG0, Tag
+from repro.net.sim import RPC
+
+
+class AbdDap(DapClient):
+    kind = "abd"
+
+    # client-local (tag, value) cache per (obj, config) — same state the
+    # EC-DAPopt keeps (Alg 4's c.tag/c.val)
+    def _local(self, obj: str) -> tuple[Tag, Any]:
+        return self.client_state.setdefault(
+            ("abd", obj, self.config.cfg_id), (TAG0, None)
+        )
+
+    def _set_local(self, obj: str, tag: Tag, val: Any) -> None:
+        self.client_state[("abd", obj, self.config.cfg_id)] = (tag, val)
+
+    def get_tag(self, obj: str) -> Generator:
+        replies = yield RPC(
+            dests=self.config.servers,
+            msg=("abd-get-tag", obj, self.cfg_idx),
+            need=self.config.quorum(),
+        )
+        return max((r[1] for r in replies.values()), default=TAG0)
+
+    def get_data(self, obj: str) -> Generator:
+        local_tag, local_val = self._local(obj)
+        replies = yield RPC(
+            dests=self.config.servers,
+            msg=("abd-get", obj, self.cfg_idx, local_tag),
+            need=self.config.quorum(),
+        )
+        tag, val = max(((r[1], r[2]) for r in replies.values()), key=lambda tv: tv[0])
+        # If EVERY quorum reply already holds the max tag, a full quorum
+        # stores it -> the read's propagation phase may be skipped soundly
+        # (any later quorum intersects this one). Classic fast-read rule.
+        if all(r[1] >= tag for r in replies.values()):
+            self.client_state[("abd_safe", obj, self.config.cfg_id)] = tag
+        if tag <= local_tag:
+            return local_tag, local_val        # nothing newer anywhere
+        # tag > local_tag: that server shipped the value
+        self._set_local(obj, tag, val)
+        return tag, val
+
+    def put_data(self, obj: str, tag: Tag, value: Any) -> Generator:
+        safe = self.client_state.get(("abd_safe", obj, self.config.cfg_id), None)
+        if safe is not None and tag <= safe:
+            return None  # already quorum-stored; skip the write-back round
+        yield RPC(
+            dests=self.config.servers,
+            msg=("abd-put", obj, self.cfg_idx, tag, value),
+            need=self.config.quorum(),
+        )
+        local_tag, _ = self._local(obj)
+        if tag >= local_tag:
+            self._set_local(obj, tag, value)
+        if safe is None or tag > safe:
+            self.client_state[("abd_safe", obj, self.config.cfg_id)] = tag
+        return None

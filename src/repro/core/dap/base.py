@@ -1,0 +1,49 @@
+"""Data Access Primitives (§III): get-tag / get-data / put-data.
+
+A DAP instance is bound to (network, client id, configuration). All three
+primitives are generators driven by the sim runner. Implementations must
+satisfy Property 1 (C1/C2) — empirically validated by the history checkers in
+``tests/checkers.py`` and the hypothesis suites.
+"""
+from __future__ import annotations
+
+from typing import Any, Generator
+
+from repro.core.tags import Config, Tag
+
+
+class DapClient:
+    kind = "?"
+
+    def __init__(self, net, client_id: str, config: Config, cfg_idx: int, client_state):
+        self.net = net
+        self.client_id = client_id
+        self.config = config
+        self.cfg_idx = cfg_idx
+        # shared mutable per-(client) state — EC-DAPopt keeps (c.tag, c.val)
+        # per (object, configuration) here (paper Alg 4 state variables).
+        self.client_state = client_state
+
+    # generators:
+    def get_tag(self, obj: str) -> Generator:  # pragma: no cover
+        raise NotImplementedError
+
+    def get_data(self, obj: str) -> Generator:
+        raise NotImplementedError
+
+    def put_data(self, obj: str, tag: Tag, value: Any) -> Generator:
+        raise NotImplementedError
+
+
+def make_dap(net, client_id: str, config: Config, cfg_idx: int, client_state) -> DapClient:
+    from repro.core.dap.abd import AbdDap
+    from repro.core.dap.ec import EcDap
+
+    if config.dap == "abd":
+        return AbdDap(net, client_id, config, cfg_idx, client_state)
+    if config.dap in ("ec", "ec_opt"):
+        return EcDap(
+            net, client_id, config, cfg_idx, client_state,
+            optimized=(config.dap == "ec_opt"),
+        )
+    raise ValueError(f"unknown DAP {config.dap!r}")

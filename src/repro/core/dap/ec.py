@@ -1,0 +1,140 @@
+"""EC-DAP [10] and EC-DAPopt (paper §VI, Algorithms 4 & 5).
+
+[n, k]-MDS Reed-Solomon over the configuration's servers: put-data encodes
+the value into n coded fragments (one per server); get-data collects Lists
+from ⌈(n+k)/2⌉ servers and returns the maximum tag that is (i) present in at
+least k Lists and (ii) decodable from >= k coded elements.
+
+EC-DAPopt changes (blue text in Alg 4/5):
+  * queries carry the client's local tag ``c.tag``; servers reply only with
+    pairs newer than it ((tag, ⊥) for the equal tag) — Alg 5:6-9;
+  * the client skips decoding when ``c.tag == t_max_dec`` (it already holds
+    the value) — Alg 4:10;
+  * put-data is a no-op when the incoming tag is not newer than ``c.tag``
+    (the servers are already up to date) — Alg 4:20;
+  * put-data updates ``(c.tag, c.val)`` on completion — Alg 4:23-24.
+
+Liveness (Thm 18) holds for <= (n-k)/2 crashes and <= δ concurrent put-data;
+a get-data round that races more writers than δ re-queries (bounded retries).
+"""
+from __future__ import annotations
+
+from typing import Any, Generator
+
+from repro.core.dap.base import DapClient
+from repro.core.tags import TAG0, Tag
+from repro.erasure.rs import RSCode
+from repro.net.sim import RPC, Sleep
+
+_MAX_RETRIES = 200
+
+
+class EcDap(DapClient):
+    def __init__(self, net, client_id, config, cfg_idx, client_state, optimized: bool):
+        super().__init__(net, client_id, config, cfg_idx, client_state)
+        self.optimized = optimized
+        self.kind = "ec_opt" if optimized else "ec"
+        self.code = RSCode(n=config.n, k=config.k)
+
+    # -- client-local (c.tag, c.val) state (Alg 4) ---------------------------
+    def _local(self, obj: str) -> tuple[Tag, Any]:
+        return self.client_state.setdefault(("ec", obj, self.config.cfg_id), (TAG0, None))
+
+    def _set_local(self, obj: str, tag: Tag, val: Any) -> None:
+        self.client_state[("ec", obj, self.config.cfg_id)] = (tag, val)
+
+    # -- primitives -----------------------------------------------------------
+    def get_tag(self, obj: str) -> Generator:
+        replies = yield RPC(
+            dests=self.config.servers,
+            msg=("ec-query", obj, self.cfg_idx, None),
+            need=self.config.quorum(),
+        )
+        counts: dict[Tag, int] = {}
+        for _, lst in replies.values():
+            for t, _e in lst:
+                counts[t] = counts.get(t, 0) + 1
+        good = [t for t, c in counts.items() if c >= self.config.k]
+        return max(good, default=TAG0)
+
+    def get_data(self, obj: str) -> Generator:
+        k = self.config.k
+        local_tag, local_val = self._local(obj)
+        query_tag = local_tag if self.optimized else None
+        for attempt in range(_MAX_RETRIES):
+            replies = yield RPC(
+                dests=self.config.servers,
+                msg=("ec-query", obj, self.cfg_idx, query_tag),
+                need=self.config.quorum(),
+            )
+            # tag -> #Lists containing it; tag -> {frag_idx: element}
+            seen: dict[Tag, int] = {}
+            frags: dict[Tag, dict[int, Any]] = {}
+            for sid, (_kindtok, lst) in replies.items():
+                fidx = self.config.frag_index(sid)
+                for t, e in lst:
+                    seen[t] = seen.get(t, 0) + 1
+                    if e is not None:
+                        frags.setdefault(t, {})[fidx] = e
+            if self.optimized:
+                # the client's own (c.tag, c.val) counts as decodable
+                seen[local_tag] = max(seen.get(local_tag, 0), k)
+                frags.setdefault(local_tag, {})
+            t_max = max(seen, default=TAG0)
+            dec = {
+                t
+                for t in seen
+                if len(frags.get(t, {})) >= k or (self.optimized and t == local_tag)
+                or t == TAG0
+            }
+            if dec:
+                t_dec = max(dec)
+                if t_dec == t_max:
+                    if self.optimized and t_dec == local_tag:
+                        return local_tag, local_val  # Alg 4:10 — no decode
+                    if t_dec == TAG0:
+                        return TAG0, None
+                    value = self._decode(t_dec, frags[t_dec])
+                    yield Sleep(self.net.latency.dec_per_byte * len(value))
+                    return t_dec, value
+            # liveness retry: a concurrent writer's tag was visible but not
+            # yet decodable; re-query (paper: the read "does not complete" —
+            # operationally we re-poll).
+            yield Sleep(float(self.net.rng.uniform(0.5e-3, 2e-3)))
+        raise RuntimeError(f"ec get-data exceeded {_MAX_RETRIES} retries on {obj}")
+
+    def put_data(self, obj: str, tag: Tag, value: Any) -> Generator:
+        local_tag, _ = self._local(obj)
+        if self.optimized and tag <= local_tag:
+            return None  # Alg 4:20 — servers already up to date
+        value_b = b"" if value is None else value
+        frag_rows, orig = self.code.encode_bytes(value_b)
+        per_dest = {
+            sid: (
+                "ec-put",
+                obj,
+                self.cfg_idx,
+                tag,
+                (frag_rows[self.config.frag_index(sid)], orig),
+                self.config.delta,
+            )
+            for sid in self.config.servers
+        }
+        yield RPC(
+            dests=self.config.servers,
+            msg=None,
+            per_dest=per_dest,
+            need=self.config.quorum(),
+            pre_delay=self.net.latency.enc_per_byte * len(value_b),
+        )
+        if self.optimized:
+            self._set_local(obj, tag, value)  # Alg 4:23-24
+        return None
+
+    # -- decode ----------------------------------------------------------------
+    def _decode(self, tag: Tag, frag_map: dict[int, Any]) -> bytes:
+        idxs = sorted(frag_map.keys())[: self.config.k]
+        orig_len = frag_map[idxs[0]][1]
+        return self.code.decode_bytes(
+            {i: frag_map[i][0] for i in idxs}, orig_len
+        )

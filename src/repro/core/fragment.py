@@ -1,0 +1,318 @@
+"""Fragmentation Module (§V, CoBFS [4]) — CoARESF = FM ∘ CoARES.
+
+A file f is a linked list of coverable blocks: genesis block b0 (file
+metadata + head pointer) followed by data blocks. The Block Identification
+(BI) pipeline (paper Fig. 2):
+
+  1. *Block Division* — content-defined chunking (gear-hash CDC standing in
+     for rabin fingerprints; ``repro.kernels.cdc_gearhash``).
+  2. *Block Matching* — Ratcliff/Obershelp sequence matching on block hashes
+     (``difflib.SequenceMatcher`` — literally the paper's citation [9]) giving
+     equality / modified / inserted / deleted statuses.
+  3. *Block Updates* — coverable writes on only the affected blocks; inserted
+     chains are written **back-to-front** so the list is always connected
+     (Lemma 13); deletes write an empty value (blocks are never unlinked).
+
+``fm_reconfig`` (Alg 3) walks the list and issues dsmm-reconfig (Alg 2) on
+every block, genesis included (§V text).
+"""
+from __future__ import annotations
+
+import hashlib
+import pickle
+from difflib import SequenceMatcher
+from typing import Any, Generator
+
+from repro.core.tags import TAG0, Config, OpRecord
+from repro.kernels.cdc_gearhash.ops import split_chunks
+from repro.net.sim import Sleep
+
+SEP = "\x01"
+
+
+def genesis_id(fid: str) -> str:
+    return f"{fid}{SEP}g"
+
+
+def encode_block_value(ptr: str | None, data: bytes) -> bytes:
+    pb = (ptr or "").encode()
+    return len(pb).to_bytes(2, "big") + pb + data
+
+
+def decode_block_value(raw: bytes | None) -> tuple[str | None, bytes]:
+    if raw in (None, b""):
+        return None, b""
+    plen = int.from_bytes(raw[:2], "big")
+    ptr = raw[2 : 2 + plen].decode() or None
+    return ptr, raw[2 + plen :]
+
+
+def _h(data: bytes) -> bytes:
+    return hashlib.sha1(data).digest()
+
+
+class FragmentationModule:
+    """Binds a DSM client (CoARES or static) to the fragmented-object logic.
+
+    ``dsm`` must expose generator methods ``cvr_read(obj)``,
+    ``cvr_write(obj, value)``, ``recon(obj, cfg)`` and a ``version`` dict
+    (coverability state, updated from reads per CoBFS).
+    """
+
+    def __init__(
+        self,
+        net,
+        dsm,
+        *,
+        min_block: int = 512,
+        avg_block: int = 1024,
+        max_block: int = 4096,
+        history: list | None = None,
+        indexed: bool = False,
+    ):
+        self.net = net
+        self.dsm = dsm
+        self.min_block = min_block
+        self.avg_block = avg_block
+        self.max_block = max_block
+        self.history = history if history is not None else []
+        self.clseq: dict[str, int] = {}
+        # ``indexed`` (beyond-paper, EXPERIMENTS.md §Perf storage iteration):
+        # the genesis block stores the full ordered block-id index, so block
+        # reads/writes issue in PARALLEL (Join) instead of walking the linked
+        # list — O(1) quorum rounds instead of O(#blocks). Connectivity
+        # reduces to the single coverable genesis flip. The paper itself
+        # flags sequential block requests as its main read overhead (§VII-D).
+        self.indexed = indexed
+
+    # ------------------------------------------------------------------ ids
+    def _new_block_id(self, fid: str) -> str:
+        seq = self.clseq.get(fid, 0) + 1
+        self.clseq[fid] = seq
+        return f"{fid}{SEP}{self.dsm.client_id}{SEP}{seq}"
+
+    # ----------------------------------------------------------------- read
+    def _read_block_op(self, bid: str):
+        tag, raw = yield from self.dsm.cvr_read(bid)
+        return bid, tag, raw
+
+    def _read_chain(self, fid: str) -> Generator:
+        """Returns [(bid, ptr, data)] — linked-list walk, or (indexed mode)
+        one genesis read + ALL block reads in parallel."""
+        from repro.net.sim import Join
+
+        g = genesis_id(fid)
+        tag, raw = yield from self.dsm.cvr_read(g)
+        self.dsm.version[g] = tag
+        ptr, meta = decode_block_value(raw)
+        if self.indexed:
+            index = pickle.loads(meta) if meta else []
+            results = yield Join([self._read_block_op(b) for b in index])
+            blocks = []
+            for bid, btag, braw in results:
+                self.dsm.version[bid] = btag
+                nxt, data = decode_block_value(braw)
+                blocks.append((bid, nxt, data))
+            return blocks
+        blocks: list[tuple[str, str | None, bytes]] = []
+        seen = set()
+        while ptr is not None and ptr not in seen:
+            seen.add(ptr)
+            tag, raw = yield from self.dsm.cvr_read(ptr)
+            self.dsm.version[ptr] = tag
+            nxt, data = decode_block_value(raw)
+            blocks.append((ptr, nxt, data))
+            ptr = nxt
+        return blocks
+
+    def fm_read(self, fid: str) -> Generator:
+        t0 = self.net.now
+        blocks = yield from self._read_chain(fid)
+        content = b"".join(d for _, _, d in blocks)
+        self.history.append(
+            OpRecord(
+                kind="fm-read", obj=fid, client=self.dsm.client_id,
+                start=t0, end=self.net.now,
+                extra={"n_blocks": len(blocks), "size": len(content)},
+            )
+        )
+        return content, blocks
+
+    # --------------------------------------------------------------- update
+    def fm_update(self, fid: str, content: bytes) -> Generator:
+        """BI + block updates. Returns stats dict (written/collided/...)."""
+        t0 = self.net.now
+        old_blocks = yield from self._read_chain(fid)
+        # --- Block Division (kernel CDC) + Matching (Ratcliff [9]) ---------
+        yield Sleep(self.net.latency.bi_per_byte * (len(content) + 1))
+        live = [(bid, data) for bid, _, data in old_blocks if data != b""]
+        chunks = split_chunks(
+            content, min_size=self.min_block, avg_size=self.avg_block,
+            max_size=self.max_block,
+        )
+        if chunks == [b""]:
+            chunks = []
+        old_hashes = [_h(d) for _, d in live]
+        new_hashes = [_h(c) for c in chunks]
+        ops = SequenceMatcher(None, old_hashes, new_hashes, autojunk=False).get_opcodes()
+        # --- build the target block list -----------------------------------
+        target: list[tuple[str | None, bytes]] = []  # (bid | None=new, data)
+        for op, i1, i2, j1, j2 in ops:
+            if op == "equal":
+                target.extend((live[i][0], live[i][1]) for i in range(i1, i2))
+            elif op == "delete":
+                target.extend((live[i][0], b"") for i in range(i1, i2))
+            elif op == "insert":
+                target.extend((None, chunks[j]) for j in range(j1, j2))
+            elif op == "replace":
+                n_pair = min(i2 - i1, j2 - j1)
+                target.extend((live[i1 + t][0], chunks[j1 + t]) for t in range(n_pair))
+                target.extend((None, chunks[j]) for j in range(j1 + n_pair, j2))
+                target.extend((live[i][0], b"") for i in range(i1 + n_pair, i2))
+        # keep tombstoned (already-empty) blocks in the chain where they were:
+        # they are invisible to matching but must stay linked. We splice them
+        # back right after their old predecessor.
+        if any(d == b"" for _, _, d in old_blocks):
+            merged: list[tuple[str | None, bytes]] = []
+            ti = 0
+            live_ids = {bid for bid, _ in live}
+            tomb_after: dict[str | None, list[str]] = {}
+            prev_live: str | None = None
+            for bid, _, d in old_blocks:
+                if d == b"":
+                    tomb_after.setdefault(prev_live, []).append(bid)
+                else:
+                    prev_live = bid
+            merged.extend((b, b"") for b in tomb_after.get(None, []))
+            for bid, data in target:
+                merged.append((bid, data))
+                if bid in live_ids:
+                    merged.extend((b, b"") for b in tomb_after.get(bid, []))
+            target = merged
+        # --- assign ids to new blocks ---------------------------------------
+        final: list[tuple[str, bytes]] = []
+        for bid, data in target:
+            final.append((bid if bid is not None else self._new_block_id(fid), data))
+        # --- diff against old state; write back-to-front --------------------
+        old_state = {bid: (nxt, data) for bid, nxt, data in old_blocks}
+        stats = {"written": 0, "collided": 0, "created": 0, "blocks": len(final),
+                 "chunks": len(chunks)}
+        g = genesis_id(fid)
+        if self.indexed:
+            from repro.net.sim import Join
+
+            old_data = {bid: data for bid, _n, data in old_blocks}
+            writes = [
+                (bid, encode_block_value(None, data))
+                for bid, data in final
+                if bid not in old_data or old_data[bid] != data
+            ]
+
+            def write_op(bid, raw):
+                res = yield from self.dsm.cvr_write(bid, raw)
+                return bid, res
+
+            results = yield Join([write_op(b, r) for b, r in writes])
+            for bid, ((tag, _v), flag) in results:
+                self.dsm.version[bid] = tag
+                if flag == "chg":
+                    stats["written"] += 1
+                    stats["created"] += int(bid not in old_state)
+                else:
+                    stats["collided"] += 1
+            new_index = [bid for bid, _ in final]
+            old_index = [bid for bid, _n, _d in old_blocks]
+            if new_index != old_index:
+                head = final[0][0] if final else None
+                (tag, _v), flag = yield from self.dsm.cvr_write(
+                    g, encode_block_value(head, pickle.dumps(new_index))
+                )
+                self.dsm.version[g] = tag
+                if flag == "chg":
+                    stats["written"] += 1
+                else:
+                    stats["collided"] += 1
+        else:
+            writes: list[tuple[str, bytes]] = []
+            for pos in range(len(final)):
+                bid, data = final[pos]
+                nxt = final[pos + 1][0] if pos + 1 < len(final) else None
+                if bid not in old_state or old_state[bid] != (nxt, data):
+                    writes.append((bid, encode_block_value(nxt, data)))
+            for bid, raw in reversed(writes):
+                is_new = bid not in old_state
+                (tag, _v), flag = yield from self.dsm.cvr_write(bid, raw)
+                self.dsm.version[bid] = tag
+                if flag == "chg":
+                    stats["written"] += 1
+                    stats["created"] += int(is_new)
+                else:
+                    stats["collided"] += 1
+            # --- genesis: repoint head if needed -----------------------------
+            new_head = final[0][0] if final else None
+            old_head = old_blocks[0][0] if old_blocks else None
+            if new_head != old_head:
+                meta = len(final).to_bytes(4, "big")
+                (tag, _v), flag = yield from self.dsm.cvr_write(
+                    g, encode_block_value(new_head, meta)
+                )
+                self.dsm.version[g] = tag
+                if flag == "chg":
+                    stats["written"] += 1
+                else:
+                    stats["collided"] += 1
+        stats["success"] = stats["collided"] == 0
+        self.history.append(
+            OpRecord(
+                kind="fm-update", obj=fid, client=self.dsm.client_id,
+                start=t0, end=self.net.now, flag="chg" if stats["success"] else "unchg",
+                extra=stats,
+            )
+        )
+        return stats
+
+    # --------------------------------------------------------------- recon
+    def fm_reconfig(self, fid: str, new_config: Config) -> Generator:
+        """Alg 3: walk the list issuing dsmm-reconfig (Alg 2) per block.
+        Indexed mode recons all blocks concurrently."""
+        t0 = self.net.now
+        g = genesis_id(fid)
+        yield from self.dsm.recon(g, new_config)
+        tag, raw = yield from self.dsm.cvr_read(g)
+        self.dsm.version[g] = tag
+        ptr, meta = decode_block_value(raw)
+        if self.indexed:
+            from repro.net.sim import Join
+
+            index = pickle.loads(meta) if meta else []
+
+            def recon_op(bid):
+                yield from self.dsm.recon(bid, new_config)
+                return bid
+
+            yield Join([recon_op(b) for b in index])
+            n = 1 + len(index)
+            self.history.append(
+                OpRecord(
+                    kind="fm-recon", obj=fid, client=self.dsm.client_id,
+                    start=t0, end=self.net.now,
+                    extra={"n_blocks": n, "config": new_config.cfg_id},
+                )
+            )
+            return n
+        n = 1
+        seen = set()
+        while ptr is not None and ptr not in seen:
+            seen.add(ptr)
+            yield from self.dsm.recon(ptr, new_config)
+            tag, raw = yield from self.dsm.cvr_read(ptr)
+            self.dsm.version[ptr] = tag
+            ptr, _ = decode_block_value(raw)
+            n += 1
+        self.history.append(
+            OpRecord(
+                kind="fm-recon", obj=fid, client=self.dsm.client_id,
+                start=t0, end=self.net.now, extra={"n_blocks": n, "config": new_config.cfg_id},
+            )
+        )
+        return n

@@ -1,0 +1,112 @@
+"""Replica server: ABD store, EC fragment Lists (Alg 5), nextC, consensus.
+
+One server object hosts state for *every* (object, configuration-index) pair —
+exactly the paper's model where a physical server participates in many
+configurations and stores many blocks. State is created lazily with the
+initial value ``(t0, v0 = None)`` / ``{(t0, Φ_i(v0))}``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.net.sim import Server
+from repro.core.tags import TAG0, Tag
+
+
+class StorageServer(Server):
+    def __init__(self, sid: str):
+        super().__init__(sid)
+        # ABD-DAP: (obj, cfg_idx) -> (tag, value)
+        self.abd: dict[tuple, tuple[Tag, Any]] = {}
+        # EC-DAP: (obj, cfg_idx) -> {tag: element | None}; None = trimmed ⊥
+        self.ec: dict[tuple, dict[Tag, Any]] = {}
+        # reconfiguration: (obj, cfg_idx) -> (config, status)
+        self.next_c: dict[tuple, tuple[Any, str]] = {}
+        # consensus acceptor: (obj, cfg_idx) -> [promised, accepted_ballot, accepted_val]
+        self.cons: dict[tuple, list] = {}
+
+    # ------------------------------------------------------------------ state
+    def _abd_state(self, key: tuple) -> tuple[Tag, Any]:
+        return self.abd.setdefault(key, (TAG0, None))
+
+    def _ec_list(self, key: tuple) -> dict[Tag, Any]:
+        # initial List = {(t0, Φ_i(v0))}; v0 = None encoded as the sentinel
+        return self.ec.setdefault(key, {TAG0: ("", 0)})
+
+    # ---------------------------------------------------------------- handler
+    def handle(self, sender: str, msg: tuple) -> Any:
+        op = msg[0]
+        if op == "abd-get":
+            # CoBFS [4] conditional transfer: ship the value only when newer
+            # than the client's tag (tag-only reply otherwise).
+            _, obj, idx, client_tag = msg
+            tag, val = self._abd_state((obj, idx))
+            if client_tag is not None and tag <= client_tag:
+                return ("abd-val", tag, None)
+            return ("abd-val", tag, val)
+        if op == "abd-get-tag":
+            _, obj, idx = msg
+            tag, _ = self._abd_state((obj, idx))
+            return ("abd-tag", tag)
+        if op == "abd-put":
+            _, obj, idx, tag, val = msg
+            cur, _ = self._abd_state((obj, idx))
+            if tag > cur:
+                self.abd[(obj, idx)] = (tag, val)
+            return ("ack",)
+        if op == "ec-query":
+            # Alg 5:4-11. client_tag None => original EC-DAP (full List);
+            # otherwise EC-DAPopt filtering: (> tag_b -> with element,
+            # == tag_b -> (tag, ⊥), < tag_b -> omitted).
+            _, obj, idx, client_tag = msg
+            lst = self._ec_list((obj, idx))
+            if client_tag is None:
+                out = [(t, e) for t, e in lst.items()]
+            else:
+                out = []
+                for t, e in lst.items():
+                    if t > client_tag:
+                        out.append((t, e))
+                    elif t == client_tag:
+                        out.append((t, None))
+            return ("ec-list", out)
+        if op == "ec-put":
+            # Alg 5:12-18: insert, then trim the *coded value* of the minimum
+            # tag when |List| > δ+1 (the (τ_min, ⊥) placeholder remains).
+            _, obj, idx, tag, elem, delta = msg
+            lst = self._ec_list((obj, idx))
+            lst[tag] = elem
+            full = [t for t, e in lst.items() if e is not None]
+            while len(full) > delta + 1:
+                tmin = min(full)
+                lst[tmin] = None
+                full.remove(tmin)
+            return ("ack",)
+        if op == "read-next":
+            _, obj, idx = msg
+            return ("next-c", self.next_c.get((obj, idx)))
+        if op == "write-next":
+            # F overrides P; P never demotes F. Config value is unique per
+            # index (consensus), so overwriting the config is idempotent.
+            _, obj, idx, cfg, status = msg
+            cur = self.next_c.get((obj, idx))
+            if cur is None or (cur[1] == "P" and status == "F") or status == "F":
+                self.next_c[(obj, idx)] = (cfg, status)
+            return ("ack",)
+        if op == "cons-p1":
+            _, obj, idx, ballot = msg
+            st = self.cons.setdefault((obj, idx), [None, None, None])
+            if st[0] is None or ballot > st[0]:
+                st[0] = ballot
+                return ("p1-ok", st[1], st[2])
+            return ("p1-nack", st[0])
+        if op == "cons-p2":
+            _, obj, idx, ballot, value = msg
+            st = self.cons.setdefault((obj, idx), [None, None, None])
+            if st[0] is None or ballot >= st[0]:
+                st[0] = ballot
+                st[1] = ballot
+                st[2] = value
+                return ("p2-ok",)
+            return ("p2-nack", st[0])
+        raise ValueError(f"unknown message {op!r}")

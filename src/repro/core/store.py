@@ -1,0 +1,159 @@
+"""DSS facade — builds the six evaluated algorithms (§VII-A) on the sim.
+
+    CoABD        static, ABD replication, whole-object
+    CoABDF       static, ABD replication, fragmented
+    CoARESABD    ARES (reconfigurable), ABD-DAP, whole-object
+    CoARESABDF   ARES, ABD-DAP, fragmented
+    CoARESEC     ARES, EC-DAPopt, whole-object
+    CoARESECF    ARES, EC-DAPopt, fragmented
+  (+ *-noopt variants running the original EC-DAP, for the §VI comparison)
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field as dc_field
+from typing import Any, Generator
+
+from repro.core.coares import CoAresClient, StaticCoverableClient
+from repro.core.fragment import FragmentationModule
+from repro.core.server import StorageServer
+from repro.core.tags import Config
+from repro.net.sim import LatencyModel, Network
+
+ALGORITHMS = {
+    # name: (reconfigurable, dap, fragmented)
+    "coabd": (False, "abd", False),
+    "coabdf": (False, "abd", True),
+    "coaresabd": (True, "abd", False),
+    "coaresabdf": (True, "abd", True),
+    "coaresec": (True, "ec_opt", False),
+    "coaresecf": (True, "ec_opt", True),
+    "coaresec-noopt": (True, "ec", False),
+    "coaresecf-noopt": (True, "ec", True),
+}
+
+
+@dataclass
+class DSSParams:
+    algorithm: str = "coaresecf"
+    n_servers: int = 6
+    parity_m: int = 1          # m = n - k (EC); ignored for ABD
+    delta: int = 8             # δ: max concurrent writers (EC List bound)
+    seed: int = 0
+    min_block: int = 512
+    avg_block: int = 1024
+    max_block: int = 4096
+    indexed: bool = False  # beyond-paper: genesis holds the block index -> parallel block I/O
+    latency: LatencyModel = dc_field(default_factory=LatencyModel)
+
+
+class ClientHandle:
+    """Uniform client API over all algorithm variants (generator methods)."""
+
+    def __init__(self, dss: "DSS", cid: str):
+        self.dss = dss
+        self.cid = cid
+        reconf, dap, frag = ALGORITHMS[dss.params.algorithm]
+        if reconf:
+            self.dsm = CoAresClient(dss.net, cid, dss.c0, history=dss.history)
+        else:
+            self.dsm = StaticCoverableClient(dss.net, cid, dss.c0, history=dss.history)
+        self.fragmented = frag
+        self.fm = (
+            FragmentationModule(
+                dss.net, self.dsm,
+                min_block=dss.params.min_block,
+                avg_block=dss.params.avg_block,
+                max_block=dss.params.max_block,
+                history=dss.history,
+                indexed=dss.params.indexed,
+            )
+            if frag
+            else None
+        )
+
+    # --- uniform generator ops ------------------------------------------------
+    def update(self, fid: str, content: bytes) -> Generator:
+        if self.fm is not None:
+            return (yield from self.fm.fm_update(fid, content))
+        (tag, _v), flag = yield from self.dsm.cvr_write(fid, content)
+        self.dsm.version[fid] = tag
+        return {"written": int(flag == "chg"), "collided": int(flag != "chg"),
+                "created": 0, "blocks": 1, "chunks": 1, "success": flag == "chg"}
+
+    def read(self, fid: str) -> Generator:
+        if self.fm is not None:
+            content, _blocks = yield from self.fm.fm_read(fid)
+            return content
+        tag, val = yield from self.dsm.cvr_read(fid)
+        self.dsm.version[fid] = tag
+        return val if val is not None else b""
+
+    def recon(self, fid: str, new_config: Config) -> Generator:
+        if self.fm is not None:
+            return (yield from self.fm.fm_reconfig(fid, new_config))
+        yield from self.dsm.recon(fid, new_config)
+        return 1
+
+
+class DSS:
+    """One deployed storage service instance."""
+
+    def __init__(self, params: DSSParams | None = None, **kw):
+        self.params = params or DSSParams(**kw)
+        p = self.params
+        if p.algorithm not in ALGORITHMS:
+            raise ValueError(f"unknown algorithm {p.algorithm!r}")
+        self.net = Network(seed=p.seed, latency=p.latency)
+        self.history: list = []
+        sids = tuple(f"s{i}" for i in range(p.n_servers))
+        for s in sids:
+            self.net.add_server(StorageServer(s))
+        _, dap, _ = ALGORITHMS[p.algorithm]
+        k = max(1, p.n_servers - p.parity_m) if dap in ("ec", "ec_opt") else 1
+        self.c0 = Config("c0", sids, dap=dap, k=k, delta=p.delta)
+        self._cfg_counter = itertools.count(1)
+        self._extra_servers = itertools.count(p.n_servers)
+
+    # --- clients ---------------------------------------------------------------
+    def client(self, cid: str) -> ClientHandle:
+        return ClientHandle(self, cid)
+
+    # --- config construction (recon targets) -----------------------------------
+    def make_config(
+        self,
+        dap: str | None = None,
+        n_servers: int | None = None,
+        parity_m: int | None = None,
+        fresh_servers: bool = False,
+    ) -> Config:
+        """Build a recon target: switch DAP and/or change the server set
+        (the paper's §VII-E scenarios)."""
+        p = self.params
+        dap = dap or self.c0.dap
+        n = n_servers or p.n_servers
+        if fresh_servers:
+            sids = []
+            for _ in range(n):
+                s = f"s{next(self._extra_servers)}"
+                self.net.add_server(StorageServer(s))
+                sids.append(s)
+            sids = tuple(sids)
+        else:
+            have = sorted(self.net.servers.keys(), key=lambda s: int(s[1:]))
+            while len(have) < n:
+                s = f"s{next(self._extra_servers)}"
+                self.net.add_server(StorageServer(s))
+                have.append(s)
+            sids = tuple(have[:n])
+        m = parity_m if parity_m is not None else p.parity_m
+        k = max(1, n - m) if dap in ("ec", "ec_opt") else 1
+        return Config(f"c{next(self._cfg_counter)}", sids, dap=dap, k=k, delta=p.delta)
+
+    # --- crash injection ---------------------------------------------------------
+    def crash_servers(self, ids: list[str]) -> None:
+        for s in ids:
+            self.net.crash(s)
+
+    def run(self, **kw) -> None:
+        self.net.run(**kw)

@@ -1,0 +1,136 @@
+"""Systematic [n, k] Reed-Solomon (Cauchy) codes over GF(256).
+
+``RSCode`` is the object-level API used by the EC DAPs (``repro.core.dap.ec*``)
+and the EC checkpoint store (``repro.train.checkpoint``):
+
+* ``encode(data)``      — (k, L) uint8 -> (n, L) coded fragments (systematic:
+                          fragments [0, k) are the data rows themselves).
+* ``decode(frs, idxs)`` — any k fragments (+ their indices) -> (k, L) data.
+
+The GF(256) matmul runs through the Pallas bitsliced kernel
+(``repro.kernels.gf256_matmul.ops``) when fragments are jnp arrays / the
+`backend="kernel"` path is selected; numpy LUT math otherwise. Both paths are
+bit-identical (tested).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.erasure.gf import gf_matmul_np
+from repro.erasure.matrix import cauchy_parity_matrix, gf_invert_matrix
+
+
+def bytes_to_rows(data: bytes, k: int) -> tuple[np.ndarray, int]:
+    """Pad ``data`` to a multiple of k and reshape to (k, L). Returns the
+    original length so ``rows_to_bytes`` can strip the padding."""
+    orig = len(data)
+    L = (orig + k - 1) // k if orig else 1
+    buf = np.zeros(k * L, dtype=np.uint8)
+    buf[:orig] = np.frombuffer(data, dtype=np.uint8)
+    return buf.reshape(k, L), orig
+
+
+def rows_to_bytes(rows: np.ndarray, orig_len: int) -> bytes:
+    return rows.reshape(-1).tobytes()[:orig_len]
+
+
+@dataclass
+class RSCode:
+    """Systematic Cauchy-RS erasure code over GF(256)."""
+
+    n: int
+    k: int
+    backend: str = "numpy"  # "numpy" | "kernel"
+    _parity: np.ndarray = field(init=False, repr=False)
+
+    def __post_init__(self) -> None:
+        if not (0 < self.k <= self.n <= 256):
+            raise ValueError(f"need 0 < k <= n <= 256, got n={self.n} k={self.k}")
+        self._parity = cauchy_parity_matrix(self.n, self.k)
+
+    # -- properties ---------------------------------------------------------
+    @property
+    def m(self) -> int:
+        return self.n - self.k
+
+    @property
+    def parity_matrix(self) -> np.ndarray:
+        return self._parity
+
+    def generator_row(self, idx: int) -> np.ndarray:
+        """Row of the full systematic generator [I; P] for fragment ``idx``."""
+        if idx < self.k:
+            row = np.zeros(self.k, dtype=np.uint8)
+            row[idx] = 1
+            return row
+        return self._parity[idx - self.k].copy()
+
+    # -- core ops ------------------------------------------------------------
+    def _matmul(self, A: np.ndarray, B: np.ndarray) -> np.ndarray:
+        if self.backend == "kernel" and A.size and B.shape[1] >= 8:
+            from repro.kernels.gf256_matmul import ops as gf_ops
+
+            return np.asarray(gf_ops.gf256_matmul(A, B))
+        return gf_matmul_np(A, B)
+
+    def encode(self, data: np.ndarray) -> np.ndarray:
+        """(k, L) uint8 -> (n, L) uint8 coded fragments (systematic)."""
+        data = np.asarray(data, dtype=np.uint8)
+        if data.shape[0] != self.k:
+            raise ValueError(f"expected {self.k} data rows, got {data.shape}")
+        if self.m == 0:
+            return data.copy()
+        parity = self._matmul(self._parity, data)
+        return np.concatenate([data, parity], axis=0)
+
+    def decode(self, fragments: np.ndarray, indices: list[int]) -> np.ndarray:
+        """Reconstruct (k, L) data from any k fragments.
+
+        ``fragments``: (k, L) uint8 rows; ``indices``: their fragment ids in
+        [0, n). Raises if fewer than k distinct fragments are supplied.
+        """
+        fragments = np.asarray(fragments, dtype=np.uint8)
+        if len(indices) != len(set(indices)):
+            raise ValueError("duplicate fragment indices")
+        if fragments.shape[0] < self.k or len(indices) < self.k:
+            raise ValueError(
+                f"need {self.k} fragments to decode, got {fragments.shape[0]}"
+            )
+        idxs = list(indices)[: self.k]
+        frs = fragments[: self.k]
+        if idxs == list(range(self.k)):
+            return frs.copy()  # all-systematic fast path
+        gen = np.stack([self.generator_row(i) for i in idxs], axis=0)
+        dec = gf_invert_matrix(gen)
+        return self._matmul(dec, frs)
+
+    def reconstruct_fragment(
+        self, target_idx: int, fragments: np.ndarray, indices: list[int]
+    ) -> np.ndarray:
+        """Rebuild a single lost fragment (server repair path)."""
+        data = self.decode(fragments, indices)
+        if target_idx < self.k:
+            return data[target_idx]
+        return self._matmul(self._parity[target_idx - self.k : target_idx - self.k + 1], data)[0]
+
+    # -- bytes-level convenience (object values in the DAPs) -----------------
+    def encode_bytes(self, value: bytes) -> tuple[list[bytes], int]:
+        rows, orig = bytes_to_rows(value, self.k)
+        coded = self.encode(rows)
+        return [coded[i].tobytes() for i in range(self.n)], orig
+
+    def decode_bytes(
+        self, fragments: dict[int, bytes], orig_len: int
+    ) -> bytes:
+        idxs = sorted(fragments.keys())[: self.k]
+        if len(idxs) < self.k:
+            raise ValueError(f"need {self.k} fragments, have {len(idxs)}")
+        L = len(fragments[idxs[0]])
+        frs = np.stack(
+            [np.frombuffer(fragments[i], dtype=np.uint8) for i in idxs], axis=0
+        )
+        assert frs.shape == (self.k, L)
+        data = self.decode(frs, idxs)
+        return rows_to_bytes(data, orig_len)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- ``gf256_matmul``: RS encode/decode as a bitsliced GF(2) matmul on the MXU
+  (DESIGN.md §3, Adaptation 1). This is the EC-DAP encode/decode hot path the
+  paper optimizes in §VI.
+- ``cdc_gearhash``: content-defined-chunking rolling hash + boundary bitmap
+  as a data-parallel windowed reduction (DESIGN.md §3, Adaptation 2). This is
+  the Fragmentation-Module Block-Division hot path (paper §V, BI step 1).
+
+Each kernel package ships ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd public wrapper) and ``ref.py`` (pure-jnp oracle).
+"""

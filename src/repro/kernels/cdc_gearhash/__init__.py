@@ -1,0 +1,3 @@
+from repro.kernels.cdc_gearhash.ops import gearhash, boundary_bitmap
+
+__all__ = ["gearhash", "boundary_bitmap"]

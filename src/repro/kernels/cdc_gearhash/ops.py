@@ -1,0 +1,99 @@
+"""Public wrappers: gear-hash stream, boundary bitmap, and chunk splitting.
+
+``split_chunks`` is what the Fragmentation Module calls: kernel-computed
+boundary candidates + a cheap host pass enforcing min/avg/max chunk sizes
+(the paper's rabin-fingerprint parameters)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cdc_gearhash.kernel import gearhash_pallas
+
+
+def _default_backend() -> str:
+    # On TPU the Pallas kernel compiles natively; on CPU the jit'd pure-jnp
+    # oracle is the fast path (interpret-mode Pallas is for validation only).
+    return "kernel" if jax.default_backend() == "tpu" else "ref"
+
+
+def _mask_for_avg(avg_size: int) -> int:
+    """Boundary mask with P(boundary) = 1/avg -> expected chunk ~= avg."""
+    bits = max(1, int(np.log2(max(2, avg_size))))
+    return (1 << bits) - 1
+
+
+@functools.partial(jax.jit, static_argnames=("mask",))
+def _ref_jit(data, *, mask):
+    from repro.kernels.cdc_gearhash.ref import gearhash_ref
+
+    return gearhash_ref(data, mask=mask)
+
+
+def gearhash(
+    data: np.ndarray | bytes, *, mask: int = 0xFFFF, block_l: int = 4096,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Rolling gear hash + boundary bitmap for a byte stream.
+
+    ``interpret=True`` forces the Pallas kernel in interpret mode (test path);
+    ``interpret=None`` auto-selects: native kernel on TPU, jit'd ref on CPU.
+    """
+    if isinstance(data, (bytes, bytearray)):
+        data = np.frombuffer(bytes(data), dtype=np.uint8)
+    data = jnp.asarray(data, dtype=jnp.uint8)
+    L = data.shape[0]
+    if interpret is None and _default_backend() == "ref":
+        return _ref_jit(data, mask=mask)
+    interpret = bool(interpret) if interpret is not None else False
+    bl = min(block_l, max(128, 1 << int(np.ceil(np.log2(max(L, 1))))))
+    Lp = (L + bl - 1) // bl * bl
+    padded = jnp.pad(data, (0, Lp - L))
+    h, b = gearhash_pallas(padded, block_l=bl, mask=mask, interpret=interpret)
+    return h[:L], b[:L]
+
+
+def boundary_bitmap(data: np.ndarray | bytes, avg_size: int, **kw) -> np.ndarray:
+    h, b = gearhash(data, mask=_mask_for_avg(avg_size), **kw)
+    return np.asarray(b)
+
+
+def split_chunks(
+    data: bytes,
+    *,
+    min_size: int,
+    avg_size: int,
+    max_size: int,
+    interpret: bool | None = None,
+) -> list[bytes]:
+    """Content-defined chunking with min/avg/max enforcement.
+
+    Kernel emits boundary candidates in parallel; the host pass walks only
+    the candidate positions (|candidates| ~= L/avg) applying min/max rules —
+    O(L) on device, O(L/avg) on host.
+    """
+    if not data:
+        return [b""]
+    bitmap = boundary_bitmap(data, avg_size, interpret=interpret)
+    cand = np.nonzero(bitmap)[0]
+    chunks: list[bytes] = []
+    start = 0
+    L = len(data)
+    ci = 0
+    while start < L:
+        lo = start + min_size
+        hi = start + max_size
+        # first candidate >= lo (strictly inside the chunk) and < hi
+        while ci < len(cand) and cand[ci] < lo:
+            ci += 1
+        if ci < len(cand) and cand[ci] < hi and cand[ci] + 1 < L:
+            end = int(cand[ci]) + 1  # boundary position is *inclusive* end
+            ci += 1
+        else:
+            end = min(hi, L)
+        chunks.append(data[start:end])
+        start = end
+    return chunks

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the gear-hash CDC kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cdc_gearhash.kernel import WINDOW, gear_mix
+
+
+def gearhash_ref(data: jnp.ndarray, mask: int = 0xFFFF) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """data: (L,) uint8 -> (hash (L,) uint32, boundary (L,) uint8).
+
+    h[i] = sum_{j<W} gear(x[i-j]) << j with x[<0] treated as 0-pad.
+    """
+    data = data.astype(jnp.uint8)
+    L = data.shape[0]
+    # x[<0] are zero *bytes* (matching the kernel's zero-row padding); note
+    # gear(0) != 0, so padding happens in byte space before mixing.
+    padded = jnp.concatenate([jnp.zeros((WINDOW - 1,), jnp.uint8), data])
+    gp = gear_mix(padded)
+    h = jnp.zeros((L,), dtype=jnp.uint32)
+    for j in range(WINDOW):
+        # gear(x[i-j]) lives at gp[i + W-1 - j]
+        h = h + (jax.lax.dynamic_slice_in_dim(gp, WINDOW - 1 - j, L) << jnp.uint32(j))
+    b = ((h & jnp.uint32(mask)) == 0).astype(jnp.uint8)
+    return h, b

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: fused flash attention (online softmax, scores in VMEM).
+
+Why (EXPERIMENTS.md §Perf): the dry-run byte profile shows materialized
+softmax chains are the #1 memory-term contributor on every attention arch
+(e.g. 950 GB of qwen3-0.6b's 2.9 TB/step). A fused kernel streams Q/K/V once
+and never writes the (Sq, Sk) score matrix to HBM: the attention memory term
+collapses from O(Sq*Sk) to O(Sq*hd + Sk*hd) per head.
+
+Layout. Grid (B, H, Sq/BQ). Per step: the q block (BQ, hd) and the FULL
+per-head K/V (Sk, hd) are resident in VMEM (v5e ~16 MB: Sk=8k, hd=128 bf16
+-> 2 x 2 MB; longer Sk would add a KV grid axis with output revisiting).
+The kernel runs the classic online-softmax recurrence over KV tiles with an
+f32 accumulator in registers/VMEM scratch:
+
+    m' = max(m, rowmax(S));  l' = l*e^(m-m') + rowsum(e^(S-m'))
+    acc' = acc*e^(m-m') + e^(S-m') @ V
+
+Causality/window masking is applied per tile from the absolute positions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, sk: int,
+                  causal: bool, window: int, scale: float):
+    iq = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (BQ, hd)
+    q_pos = iq * bq + jax.lax.iota(jnp.int32, bq)
+    nk = sk // bk
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0, 0], j * bk, bk, 0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0, 0], j * bk, bk, 0)
+        s = q @ k.astype(jnp.float32).T                   # (BQ, BK) in VMEM
+        k_pos = j * bk + jax.lax.iota(jnp.int32, bk)
+        ok = jnp.ones((bq, bk), bool)
+        if causal:
+            ok &= k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            ok &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(ok, s, NEG)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((bq, q.shape[1]), jnp.float32)
+    m0 = jnp.full((bq,), NEG, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nk, body, (acc0, m0, l0))
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bq", "bk", "causal", "window", "interpret")
+)
+def flash_attention_pallas(
+    q, k, v, *, bq: int = 128, bk: int = 128, causal: bool = True,
+    window: int = 0, interpret: bool = False,
+):
+    """q (B, H, Sq, hd); k/v (B, H, Sk, hd) -> (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    scale = float(1.0 / (hd ** 0.5))
+    grid = (B, H, Sq // bq)
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, bq=bq, bk=bk, sk=Sk, causal=causal,
+            window=window, scale=scale,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, Sk, hd), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, Sk, hd), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

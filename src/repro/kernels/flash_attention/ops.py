@@ -1,0 +1,21 @@
+"""Public wrapper: fused flash attention.
+
+TPU: native Pallas kernel. CPU (this container): the kernel runs under
+interpret=True for validation; production CPU/dry-run paths use the blocked
+jnp attention in ``repro.models.layers.gqa_attention`` (the dry-run cannot
+compile TPU Pallas custom-calls — the roofline's flash-adjusted memory term
+is derived analytically in EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention_pallas(
+        q, k, v, bq=bq, bk=bk, causal=causal, window=window, interpret=interpret
+    )

@@ -1,0 +1,71 @@
+"""Public jit'd wrappers for the bitsliced GF(256) matmul kernel.
+
+``gf256_matmul(A, B)`` — drop-in GF(256) matrix product; host-side prep
+(bit-matrix expansion of the tiny A, L padding) + the Pallas kernel.
+``rs_encode_parity(parity_matrix, data)`` — the RS encode hot path.
+
+On CPU (this container) the kernel runs in ``interpret=True`` mode; on TPU it
+compiles natively. Both are bit-identical to ``ref.gf256_matmul_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.erasure.gf import gf_matrix_to_bitmatrix
+from repro.kernels.gf256_matmul.kernel import _round_up, gf2_bitsliced_matmul
+
+# f32 VMEM tile is (8, 128); pad the bit-matrix to it.
+_SUBLANE, _LANE = 8, 128
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.lru_cache(maxsize=128)
+def _abits_cached(a_bytes: bytes, m: int, k: int) -> np.ndarray:
+    A = np.frombuffer(a_bytes, dtype=np.uint8).reshape(m, k)
+    bits = gf_matrix_to_bitmatrix(A).astype(np.float32)  # (8m, 8k)
+    mp = _round_up(8 * m, _SUBLANE)
+    kp = _round_up(8 * k, _LANE)
+    out = np.zeros((mp, kp), dtype=np.float32)
+    out[: 8 * m, : 8 * k] = bits
+    return out
+
+
+def gf256_matmul(
+    A: np.ndarray,
+    B: np.ndarray | jax.Array,
+    *,
+    block_l: int = 2048,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """GF(256) matrix product C = A (x) B. A: (m, k) uint8 (host, small);
+    B: (k, L) uint8 (device, large). Returns (m, L) uint8."""
+    if interpret is None:
+        interpret = _default_interpret()
+    A = np.asarray(A, dtype=np.uint8)
+    m, k = A.shape
+    B = jnp.asarray(B, dtype=jnp.uint8)
+    assert B.shape[0] == k, (A.shape, B.shape)
+    L = B.shape[1]
+    # Block size: shrink for small inputs (interpret-mode tests), keep
+    # lane-aligned where possible.
+    bl = min(block_l, _round_up(L, _LANE))
+    Lp = _round_up(L, bl)
+    if Lp != L:
+        B = jnp.pad(B, ((0, 0), (0, Lp - L)))
+    abits = jnp.asarray(_abits_cached(A.tobytes(), m, k))
+    out = gf2_bitsliced_matmul(abits, B, m=m, k=k, block_l=bl, interpret=interpret)
+    return out[:, :L]
+
+
+def rs_encode_parity(
+    parity_matrix: np.ndarray, data: np.ndarray | jax.Array, **kw
+) -> jax.Array:
+    """Parity rows for a systematic RS code: P = parity_matrix (x) data."""
+    return gf256_matmul(parity_matrix, data, **kw)

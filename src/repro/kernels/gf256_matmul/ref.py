@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the GF(256) matmul kernel (log/antilog LUT model)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.erasure.gf import EXP_TABLE, LOG_TABLE
+
+_EXP_J = jnp.asarray(EXP_TABLE)  # (512,) uint8
+_LOG_J = jnp.asarray(LOG_TABLE)  # (256,) int32
+
+
+def gf_mul_jnp(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise GF(256) product (uint8 in/out, broadcasting)."""
+    a = a.astype(jnp.uint8)
+    b = b.astype(jnp.uint8)
+    nz = (a != 0) & (b != 0)
+    prod = _EXP_J[_LOG_J[a.astype(jnp.int32)] + _LOG_J[b.astype(jnp.int32)]]
+    return jnp.where(nz, prod, jnp.uint8(0))
+
+
+def gf256_matmul_ref(A: np.ndarray | jnp.ndarray, B: np.ndarray | jnp.ndarray) -> jnp.ndarray:
+    """C[i, j] = XOR_k A[i, k] * B[k, j] over GF(256). A: (m, k), B: (k, L)."""
+    A = jnp.asarray(A, dtype=jnp.uint8)
+    B = jnp.asarray(B, dtype=jnp.uint8)
+    m, k = A.shape
+    out = jnp.zeros((m, B.shape[1]), dtype=jnp.uint8)
+    for i in range(k):  # k is small & static: unrolled XOR fold
+        out = out ^ gf_mul_jnp(A[:, i][:, None], B[i][None, :])
+    return out

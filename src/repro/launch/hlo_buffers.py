@@ -1,0 +1,101 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Debug tool: compile one cell and list the largest HLO buffers.
+
+  PYTHONPATH=src python -m repro.launch.hlo_buffers --arch X --shape Y [--multi-pod]
+"""
+import argparse
+import re
+
+import jax
+
+from repro.configs import get_arch
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import build_model, input_specs
+from repro.models.sharding import MeshCtx
+from repro.roofline.hlo_parse import _DTYPE_BYTES, _SHAPE_RE
+from repro.train.steps import (
+    batch_shardings,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    training_state_shapes,
+    training_state_specs,
+)
+
+
+def compile_cell(arch: str, shape_name: str, multi_pod: bool = False):
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = MeshCtx(mesh)
+    model = build_model(cfg, max_pos=shape.seq_len)
+    ispecs = input_specs(cfg, shape)
+    bshard = batch_shardings(cfg, shape, ctx)
+    if shape.kind == "train":
+        pshapes, oshapes = training_state_shapes(model)
+        pspecs, ospecs = training_state_specs(model, ctx)
+        step = make_train_step(model, ctx)
+        jitted = jax.jit(step, in_shardings=(pspecs, ospecs, bshard),
+                         out_shardings=(pspecs, ospecs, ctx.replicated()),
+                         donate_argnums=(0, 1))
+        return jitted.lower(pshapes, oshapes, ispecs).compile(), model, ctx
+    if shape.kind == "prefill":
+        pshapes = model.param_shapes()
+        pspecs = model.param_specs(ctx, serve=True)
+        step = make_prefill_step(model, ctx)
+        jitted = jax.jit(step, in_shardings=(pspecs, bshard))
+        return jitted.lower(pshapes, ispecs).compile(), model, ctx
+    pshapes = model.param_shapes()
+    pspecs = model.param_specs(ctx, serve=True)
+    B, S = shape.global_batch, shape.seq_len
+    ctmpl = model.cache_template(B, S)
+    cshapes = {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in ctmpl.items()}
+    cspecs = model.cache_specs(B, S, ctx)
+    step = make_serve_step(model, ctx)
+    jitted = jax.jit(step, in_shardings=(pspecs, cspecs, bshard),
+                     out_shardings=(ctx.replicated() if B % ctx.n_batch else
+                                    ctx.ns(ctx.batch_axes, None), cspecs),
+                     donate_argnums=(1,))
+    return jitted.lower(pshapes, cshapes, ispecs).compile(), model, ctx
+
+
+def list_buffers(hlo_text: str, top: int = 20, min_gb: float = 0.2):
+    best: dict[str, tuple[int, int, str]] = {}
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ROOT )?%[\w.\-]+ = ", line)
+        if not m:
+            continue
+        head = line.split(" = ", 1)[1]
+        shape_txt = head.split("(")[0]
+        tot = 0
+        for dt, dims in _SHAPE_RE.findall(shape_txt):
+            if dt in _DTYPE_BYTES:
+                n = 1
+                for d in dims.split(",") if dims else []:
+                    n *= int(d)
+                tot += n * _DTYPE_BYTES[dt]
+        if tot < min_gb * 1e9:
+            continue
+        key = shape_txt.strip()[:64]
+        md = re.search(r'op_name="([^"]*)"', line)
+        cnt = best.get(key, (0, 0, ""))[1]
+        best[key] = (tot, cnt + 1, (md.group(1) if md else "")[:110])
+    rows = sorted(best.items(), key=lambda kv: -kv[1][0])[:top]
+    for k, (t, c, src) in rows:
+        print(f"{t/1e9:7.2f} GB x{c:3d}  {k}\n                   {src}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=16)
+    args = ap.parse_args()
+    compiled, model, ctx = compile_cell(args.arch, args.shape, args.multi_pod)
+    mem = compiled.memory_analysis()
+    print("temp bytes:", getattr(mem, "temp_size_in_bytes", "?"))
+    list_buffers(compiled.as_text(), top=args.top)

@@ -1,0 +1,11 @@
+"""Pure-JAX model zoo for the 10 assigned architectures.
+
+Functional style: params are pytrees of jnp arrays; layer weights are stacked
+along a leading ``n_layers`` axis and consumed by ``jax.lax.scan`` (small HLO,
+fast compiles, remat-friendly). Sharding is expressed as best-effort
+``NamedSharding`` constraints computed per (config, mesh) by
+``repro.models.sharding.ShardingPlan``.
+"""
+from repro.models.registry import build_model
+
+__all__ = ["build_model"]

@@ -1,0 +1,326 @@
+"""Shared layer library: norms, RoPE variants, GQA attention, MLP, MoE.
+
+Conventions: activations bf16, reductions/softmax/norms in f32. Weight trees
+are plain dicts; stacked-layer weights carry a leading L axis for lax.scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def dt(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ----------------------------------------------------------------- norms
+def rms_norm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return ((x32 * inv) * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_cos_sin(positions, n_freq: int, theta: float):
+    """positions (..., S) int32 -> cos/sin (..., S, n_freq) f32."""
+    freqs = 1.0 / (theta ** (jnp.arange(n_freq, dtype=jnp.float32) / n_freq))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions, sections: tuple[int, ...], theta: float):
+    """Qwen2-VL M-RoPE: positions (3, B, S) — temporal/height/width streams.
+
+    The hd/2 frequency slots are split into ``sections``; slot group g takes
+    its rotation angle from position stream g. [arXiv:2409.12191]
+    """
+    n_freq = sum(sections)
+    freqs = 1.0 / (theta ** (jnp.arange(n_freq, dtype=jnp.float32) / n_freq))
+    ang_all = positions.astype(jnp.float32)[..., None] * freqs  # (3, B, S, n_freq)
+    parts = []
+    start = 0
+    for g, width in enumerate(sections):
+        parts.append(ang_all[g, ..., start : start + width])
+        start += width
+    ang = jnp.concatenate(parts, axis=-1)  # (B, S, n_freq)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, fraction: float = 1.0):
+    """x (B, S, H, hd); cos/sin (B, S, hd_rot/2). Half-split (LLaMA) style.
+
+    ``fraction < 1`` (chatglm3 "RoPE 2d"): rotate only the first
+    ``hd * fraction`` dims, pass the rest through.
+    """
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    x1, x2 = xr[..., :half], xr[..., half:]
+    c = cos[:, :, None, :].astype(jnp.float32)
+    s = sin[:, :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    y1 = x1f * c - x2f * s
+    y2 = x2f * c + x1f * s
+    out = jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+    if rot < hd:
+        out = jnp.concatenate([out, xp], axis=-1)
+    return out
+
+
+# ------------------------------------------------------------- attention
+def _mask_bias(q_pos, k_pos, window, causal: bool):
+    """Additive f32 bias (…, Sq, Sk): 0 where attendable, -1e30 elsewhere.
+
+    ``window`` may be a *traced* scalar (gemma3 alternates local/global
+    windows across scanned layers, so it is data, not Python control flow).
+    """
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), dtype=bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def gqa_attention(
+    q, k, v, *, q_pos, k_pos, causal: bool = True, window=None,
+    q_chunk: int = 1024, ctx=None, score_dtype=jnp.bfloat16,
+):
+    """Grouped-query attention. q (B,Sq,H,hd); k/v (B,Sk,KV,hd).
+
+    Perf-iterated (see EXPERIMENTS.md §Perf):
+      * KV heads are expanded to H up front so q/k/v/scores all shard
+        uniformly on the heads axis — mixed head/head_dim shardings
+        otherwise leave the (B,H,Sq,Sk) scores replicated per chip
+        (observed: 34 GB/layer on qwen3-moe);
+      * the score chain runs in bf16 (max is exact; exp elementwise; the
+        softmax DENOMINATOR accumulates in f32), dots carry
+        preferred_element_type — on TPU the MXU accumulates f32 internally
+        and rounds the output, so this is the native bf16-matmul behaviour
+        at half the HBM traffic of f32 scores;
+      * q-chunked with remat: score buffers are bounded to
+        (B, H, q_chunk, Sk) and recomputed in the backward (flash-attention
+        memory behaviour, in pure JAX).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    # KV->H expansion ONLY when the kv heads cannot shard over "model" but
+    # the full heads can: mixed q/k shardings otherwise leave the score
+    # tensor replicated. When KV itself divides (or nothing does), the
+    # grouped einsum stays — expansion would multiply k/v bytes by G for no
+    # sharding benefit (refuted-hypothesis record in EXPERIMENTS.md §Perf).
+    expand = False
+    if ctx is not None and G > 1:
+        expand = (KV % ctx.n_model != 0) and (H % ctx.n_model == 0)
+    if expand:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        KV_eff, G_eff = H, 1
+    else:
+        KV_eff, G_eff = KV, G
+    if ctx is not None and KV_eff % ctx.n_model == 0 and Sq > 1:
+        spec = (ctx.batch_axes, None, "model", None)
+        k = ctx.constrain(k, *spec)
+        v = ctx.constrain(v, *spec)
+    scale = np.float32(1.0 / np.sqrt(hd))
+
+    def attend(q_blk, qp_blk):
+        # q_blk (B, Sc, KV_eff, G_eff, hd)
+        s = jnp.einsum(
+            "bqkgd,bskd->bkgqs", q_blk, k, preferred_element_type=score_dtype,
+            optimize=True,
+        )
+        bias = _mask_bias(qp_blk, k_pos, window, causal).astype(score_dtype)
+        s = s * score_dtype(scale) + bias[None, None, None]
+        m = jnp.max(s, axis=-1, keepdims=True)          # exact in bf16
+        e = jnp.exp(s - m)
+        den = jnp.sum(e, axis=-1, keepdims=True, dtype=jnp.float32)  # f32 acc
+        w = e / den.astype(score_dtype)
+        out = jnp.einsum(
+            "bkgqs,bskd->bqkgd", w, v, preferred_element_type=jnp.float32,
+            optimize=True,
+        )
+        return out.astype(q.dtype)
+
+    qg = q.reshape(B, Sq, KV_eff, G_eff, hd)
+    if Sq <= q_chunk:
+        out = attend(qg, q_pos)
+    else:
+        n = Sq // q_chunk
+        assert Sq % q_chunk == 0, (Sq, q_chunk)
+        qs = qg.reshape(B, n, q_chunk, KV_eff, G_eff, hd).transpose(1, 0, 2, 3, 4, 5)
+        ps = q_pos.reshape(n, q_chunk)
+        body = jax.checkpoint(
+            lambda args: attend(*args),
+            policy=jax.checkpoint_policies.nothing_saveable,
+        )
+        out = jax.lax.map(body, (qs, ps))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV_eff, G_eff, hd)
+    return out.reshape(B, Sq, H, hd)
+
+
+# ------------------------------------------------------------------ MLP
+def swiglu_mlp(x, wi_gate, wi_up, wo):
+    g = jnp.einsum("bsd,df->bsf", x, wi_gate)
+    u = jnp.einsum("bsd,df->bsf", x, wi_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, wo)
+
+
+def gelu_mlp(x, wi, bi, wo, bo):
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, wi) + bi, approximate=True)
+    return jnp.einsum("bsf,fd->bsd", h.astype(x.dtype), wo) + bo
+
+
+# ------------------------------------------------------------------ MoE
+def _moe_tokens(xt, wr, w_gate, w_up, w_down, *, top_k: int, capacity: int):
+    """Sort-based dispatch over a flat token block (T, D). Runs either on the
+    whole array (reference / decode path) or per-shard inside the EP
+    shard_map. Returns (y (T, D), per-expert load stats for the aux loss)."""
+    T, D = xt.shape
+    E = wr.shape[1]
+    C = capacity
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), wr.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)           # (T, K)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+    me = probs.mean(axis=0)                                      # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        jnp.ones((T * top_k,), jnp.float32)
+    ) / (T * top_k)
+    flat_e = gate_idx.reshape(-1)                                # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+    flat_w = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    group_start = jnp.searchsorted(se, jnp.arange(E, dtype=se.dtype), side="left")
+    pos = jnp.arange(T * top_k, dtype=jnp.int32) - group_start[se].astype(jnp.int32)
+    keep = pos < C
+    slot = jnp.where(keep, se.astype(jnp.int32) * C + pos, E * C)  # E*C = drop bin
+    buf = jnp.zeros((E * C + 1, D), xt.dtype).at[slot].set(xt[st])
+    buf = buf[:-1].reshape(E, C, D)
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xt.dtype) * u
+    yb = jnp.einsum("ecf,efd->ecd", h, w_down)
+    ybf = jnp.concatenate([yb.reshape(E * C, D), jnp.zeros((1, D), xt.dtype)], axis=0)
+    contrib = ybf[slot] * sw[:, None].astype(xt.dtype)
+    y = jnp.zeros((T, D), xt.dtype).at[st].add(jnp.where(keep[:, None], contrib, 0))
+    return y, (me, ce)
+
+
+def _capacity(T: int, top_k: int, E: int, cf: float) -> int:
+    C = int(np.ceil(T * top_k / E * cf))
+    return max(8, -(-C // 8) * 8)
+
+
+def moe_layer(x, wr, w_gate, w_up, w_down, *, top_k: int, capacity_factor: float,
+              ctx=None):
+    """Top-k MoE with capacity + dropping (GShard-style).
+
+    x (B, S, D); wr (D, E); w_gate/w_up (E, D, F); w_down (E, F, D).
+    With a mesh ctx and S > 1 this runs as **expert parallelism** via
+    shard_map: routing/sort stay local to each chip (T_loc tokens), coded
+    buffers (E, C_loc, D) exchange via all_to_all over "model" (experts live
+    E/n_model per chip), expert FFNs run as local batched matmuls, and a
+    second all_to_all returns the outputs. Without ctx (CPU smoke / decode)
+    the reference whole-array path runs instead. Returns (y, aux_loss).
+    """
+    B, S, D = x.shape
+    E = wr.shape[1]
+    if ctx is None or S == 1 or E % ctx.n_model != 0:
+        y, (me, ce) = _moe_tokens(
+            x.reshape(B * S, D), wr, w_gate, w_up, w_down,
+            top_k=top_k, capacity=_capacity(B * S, top_k, E, capacity_factor),
+        )
+        aux = E * jnp.sum(me * ce)
+        return y.reshape(B, S, D), aux
+
+    mesh = ctx.mesh
+    from jax.sharding import PartitionSpec as P
+
+    n_model = ctx.n_model
+    E_loc = E // n_model
+    n_batch = ctx.n_batch
+    B_loc = B // n_batch if B % n_batch == 0 and B >= n_batch else B
+    S_loc = S // n_model if S % n_model == 0 else S
+    T_loc = B_loc * S_loc
+    C = _capacity(T_loc, top_k, E, capacity_factor)
+    batch_spec = ctx.batch_axes if B_loc != B else None
+    seq_spec = "model" if S_loc != S else None
+    all_axes = tuple(mesh.axis_names)
+
+    def body(xs, wr_, wg_, wu_, wd_):
+        xt = xs.reshape(-1, D)
+        Tl = xt.shape[0]
+        logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), wr_.astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, top_k)
+        gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+        me = probs.mean(axis=0)
+        ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(
+            jnp.ones((Tl * top_k,), jnp.float32)
+        ) / (Tl * top_k)
+        flat_e = gate_idx.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(Tl, dtype=jnp.int32), top_k)
+        flat_w = gate_vals.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+        group_start = jnp.searchsorted(se, jnp.arange(E, dtype=se.dtype), side="left")
+        pos = jnp.arange(Tl * top_k, dtype=jnp.int32) - group_start[se].astype(jnp.int32)
+        keep = pos < C
+        slot = jnp.where(keep, se.astype(jnp.int32) * C + pos, E * C)
+        buf = jnp.zeros((E * C + 1, D), xt.dtype).at[slot].set(xt[st])
+        buf = buf[:-1].reshape(n_model, E_loc * C, D)
+        # EP dispatch: peer p gets my contributions for ITS experts
+        recv = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=0, tiled=True)
+        toks = recv.reshape(E_loc, n_model * C, D)               # my experts' tokens
+        g = jnp.einsum("ecd,edf->ecf", toks, wg_)
+        u = jnp.einsum("ecd,edf->ecf", toks, wu_)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xt.dtype) * u
+        yb = jnp.einsum("ecf,efd->ecd", h, wd_)
+        send = yb.reshape(n_model, E_loc * C, D)
+        back = jax.lax.all_to_all(send, "model", split_axis=0, concat_axis=0, tiled=True)
+        ybf = jnp.concatenate(
+            [back.reshape(E * C, D), jnp.zeros((1, D), xt.dtype)], axis=0
+        )
+        contrib = ybf[slot] * sw[:, None].astype(xt.dtype)
+        y = jnp.zeros((Tl, D), xt.dtype).at[st].add(jnp.where(keep[:, None], contrib, 0))
+        aux_loc = E * jnp.sum(me * ce)
+        aux = jax.lax.pmean(aux_loc, axis_name=all_axes)
+        return y.reshape(xs.shape), aux
+
+    y, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(batch_spec, seq_spec, None), P(None, None),
+            P("model", None, None), P("model", None, None), P("model", None, None),
+        ),
+        out_specs=(P(batch_spec, seq_spec, None), P()),
+    )(x, wr, w_gate, w_up, w_down)
+    return y, aux
+
+
+# ----------------------------------------------------------- init helpers
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)

@@ -1,0 +1,847 @@
+"""Unified LM covering all assigned families.
+
+Families:
+  dense / vlm     — pre-norm GQA attention + SwiGLU MLP
+  moe             — GQA attention + sort-based top-k MoE (EP over "model")
+  ssm             — Mamba2 (SSD) mixer layers
+  hybrid          — Zamba2: groups of Mamba2 layers + ONE shared attention+MLP
+                    block applied after every group (weights reused)
+  encdec          — Whisper: bidirectional encoder (stub audio embeddings) +
+                    causal decoder with cross-attention
+
+All layer stacks run as ``lax.scan`` over stacked weights with
+``jax.checkpoint`` (nothing_saveable) — layer-boundary activations only.
+Residual streams carry a Megatron-style sequence-parallel sharding
+(batch, "model", None) between blocks; see DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import ssd
+from repro.models.layers import (
+    apply_rope,
+    dense_init,
+    gelu_mlp,
+    gqa_attention,
+    layer_norm,
+    moe_layer,
+    mrope_cos_sin,
+    rms_norm,
+    rope_cos_sin,
+    swiglu_mlp,
+)
+from repro.models.sharding import MeshCtx, spec_with_model_on
+
+Pytree = Any
+
+
+# =========================================================================
+# parameter templates
+# =========================================================================
+def _attn_shapes(cfg: ArchConfig, stacked: int | None) -> dict:
+    H, KV, hd, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_model
+    bf = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def s(*shape):
+        return ((stacked, *shape) if stacked else shape, bf)
+
+    out = {
+        "wq": s(D, H, hd), "wk": s(D, KV, hd), "wv": s(D, KV, hd),
+        "wo": s(H, hd, D),
+    }
+    if cfg.qkv_bias:
+        out.update({"bq": s(H, hd), "bk": s(KV, hd), "bv": s(KV, hd)})
+    if cfg.qk_norm:
+        out.update({"qn": s(hd), "kn": s(hd)})
+    return out
+
+
+def _mlp_shapes(cfg: ArchConfig, stacked: int | None, d_ff: int | None = None) -> dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    bf = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def s(*shape):
+        return ((stacked, *shape) if stacked else shape, bf)
+
+    return {"wg": s(D, F), "wu": s(D, F), "wd": s(F, D)}
+
+
+def _moe_shapes(cfg: ArchConfig, stacked: int | None) -> dict:
+    D, E, F = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff
+    bf = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def s(*shape):
+        return ((stacked, *shape) if stacked else shape, bf)
+
+    return {
+        "wr": s(D, E), "w_gate": s(E, D, F), "w_up": s(E, D, F), "w_down": s(E, F, D),
+    }
+
+
+def _norm_shapes(cfg: ArchConfig, stacked: int | None, names=("ln1", "ln2")) -> dict:
+    f32 = jnp.float32
+    D = cfg.d_model
+
+    def s(*shape):
+        return ((stacked, *shape) if stacked else shape, f32)
+
+    return {n: s(D) for n in names}
+
+
+PURE_DP_MAX_PARAMS = 2.5e8  # below this, TP wastes the mesh: replicate
+
+
+def _remat_policy(model: "LM"):
+    # Hypothesis tested and REFUTED (EXPERIMENTS.md §Perf cell A, iter 3):
+    # saving dot outputs on memory-headroom models (dots_with_no_batch_dims_
+    # saveable) cut the compute term 6% but RAISED the memory bound 6%
+    # (0.498 -> 0.528 s on whisper train) — on memory-bound cells the
+    # backward recompute is free while the saved activations cost traffic.
+    # nothing_saveable everywhere.
+    return jax.checkpoint_policies.nothing_saveable
+
+
+class LM:
+    def __init__(self, cfg: ArchConfig, max_pos: int = 4096):
+        self.cfg = cfg
+        self.max_pos = max_pos  # whisper decoder learned-position table size
+        # Tiny models (whisper-base: 72M) are pure-DP: weights replicated,
+        # batch sharded over EVERY mesh axis. TP/SP on a d=512 model spends
+        # more on gathers than it saves (EXPERIMENTS.md §Perf iteration 3).
+        self.pure_dp = self.n_params() <= PURE_DP_MAX_PARAMS
+
+    def _tok_spec(self, ctx) -> tuple:
+        if self.pure_dp:
+            return ((*ctx.batch_axes, "model"), None, None)
+        return (ctx.batch_axes, "model", None)
+
+    # ------------------------------------------------------------- template
+    def param_template(self) -> dict:
+        cfg = self.cfg
+        bf = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        L = cfg.n_layers
+        t: dict = {"final_ln": ((cfg.d_model,), jnp.float32)}
+        if cfg.family == "encdec":
+            Le, Ld = cfg.encoder_layers, cfg.n_layers
+            t["embed"] = ((cfg.vocab, cfg.d_model), bf)
+            t["dec_pos"] = ((self.max_pos, cfg.d_model), bf)
+            t["enc"] = {
+                **_attn_shapes(cfg, Le), **_mlp_shapes(cfg, Le),
+                **_norm_shapes(cfg, Le),
+                "b1": ((Le, cfg.d_model), jnp.float32),
+                "b2": ((Le, cfg.d_model), jnp.float32),
+            }
+            t["enc_final_ln"] = ((cfg.d_model,), jnp.float32)
+            t["enc_final_b"] = ((cfg.d_model,), jnp.float32)
+            t["final_b"] = ((cfg.d_model,), jnp.float32)
+            dec = {
+                **_attn_shapes(cfg, Ld), **_mlp_shapes(cfg, Ld),
+                **_norm_shapes(cfg, Ld, ("ln1", "ln2", "ln3")),
+                "b1": ((Ld, cfg.d_model), jnp.float32),
+                "b2": ((Ld, cfg.d_model), jnp.float32),
+                "b3": ((Ld, cfg.d_model), jnp.float32),
+            }
+            # cross-attention
+            for k, v in _attn_shapes(cfg, Ld).items():
+                dec["x" + k] = v
+            t["dec"] = dec
+            return t
+        if cfg.family == "ssm":
+            t["embed"] = ((cfg.vocab, cfg.d_model), bf)
+            blk = {k: ((L, *shp), dtype) for k, (shp, dtype) in ssd.mamba2_param_shapes(cfg).items()}
+            blk["ln"] = ((L, cfg.d_model), jnp.float32)
+            t["layers"] = blk
+            if not cfg.tie_embeddings:
+                t["head"] = ((cfg.d_model, cfg.vocab), bf)
+            return t
+        if cfg.family == "hybrid":
+            t["embed"] = ((cfg.vocab, cfg.d_model), bf)
+            blk = {k: ((L, *shp), dtype) for k, (shp, dtype) in ssd.mamba2_param_shapes(cfg).items()}
+            blk["ln"] = ((L, cfg.d_model), jnp.float32)
+            t["layers"] = blk
+            t["shared"] = {
+                **_attn_shapes(cfg, None), **_mlp_shapes(cfg, None),
+                **_norm_shapes(cfg, None),
+            }
+            if not cfg.tie_embeddings:
+                t["head"] = ((cfg.d_model, cfg.vocab), bf)
+            return t
+        # dense / moe / vlm decoder
+        blk = {**_attn_shapes(cfg, L), **_norm_shapes(cfg, L)}
+        if cfg.family == "moe":
+            blk.update(_moe_shapes(cfg, L))
+        else:
+            blk.update(_mlp_shapes(cfg, L))
+        t["layers"] = blk
+        if not cfg.embeddings_input:
+            t["embed"] = ((cfg.vocab, cfg.d_model), bf)
+        if not cfg.tie_embeddings:
+            t["head"] = ((cfg.d_model, cfg.vocab), bf)
+        return t
+
+    def param_shapes(self) -> Pytree:
+        return jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct(sd[0], sd[1]),
+            self.param_template(),
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple),
+        )
+
+    def init_params(self, key) -> Pytree:
+        tmpl = self.param_template()
+        leaves, treedef = jax.tree.flatten(
+            tmpl,
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple),
+        )
+        keys = jax.random.split(key, len(leaves))
+        outs = []
+        for (shape, dtype), k in zip(leaves, keys):
+            if len(shape) == 1 or shape[-1] in ():
+                outs.append(jnp.zeros(shape, dtype))
+            else:
+                outs.append(dense_init(k, shape, dtype))
+        return jax.tree.unflatten(treedef, outs)
+
+    def n_params(self) -> int:
+        leaves, _ = jax.tree.flatten(
+            self.param_template(),
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple),
+        )
+        return int(sum(np.prod(s) for s, _ in leaves))
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k of E experts)."""
+        cfg = self.cfg
+        total = self.n_params()
+        if cfg.family != "moe":
+            return total
+        tmpl = self.param_template()["layers"]
+        expert = sum(
+            int(np.prod(tmpl[k][0])) for k in ("w_gate", "w_up", "w_down")
+        )
+        active = expert // cfg.moe_experts * cfg.moe_top_k
+        return total - expert + active
+
+    # ------------------------------------------------------------- specs
+    def param_specs(self, ctx: MeshCtx, serve: bool = False) -> Pytree:
+        """Weight shardings. ``serve=True`` additionally shards the MoE
+        expert tensors over the data axes (there is no DP gradient in
+        inference, so nothing needs weight replication): 16x less HBM per
+        chip for expert weights — decode is weights-bound — and it kills the
+        CPU-backend's hoisted f32 weight copies in the dry-run."""
+        cfg = self.cfg
+        if self.pure_dp and not serve:
+            return jax.tree.map(
+                lambda sd: ctx.replicated(), self.param_shapes(),
+            )
+
+        def leaf_spec(path: tuple, shape: tuple) -> tuple:
+            name = path[-1]
+            stacked = len(path) >= 2 and path[0] in ("layers", "enc", "dec")
+            off = 1 if stacked else 0
+            body = shape[off:]
+            if name in ("embed", "dec_pos"):
+                return spec_with_model_on(shape, ctx, [0, 1])
+            if name == "head":
+                return spec_with_model_on(shape, ctx, [1, 0])
+            base: tuple
+            if name.lstrip("x") in ("wq", "wo", "bq", "qn", "kn"):
+                # heads dim (or head_dim fallback)
+                if name.lstrip("x") == "wq":
+                    base = spec_with_model_on(body, ctx, [1, 2])
+                elif name.lstrip("x") == "wo":
+                    base = spec_with_model_on(body, ctx, [0, 1])
+                elif name.lstrip("x") == "bq":
+                    base = spec_with_model_on(body, ctx, [0, 1])
+                else:
+                    base = (None,) * len(body)
+            elif name.lstrip("x") in ("wk", "wv", "bk", "bv"):
+                base = spec_with_model_on(body, ctx, [1, 2])
+            elif name in ("wg", "wu"):
+                base = spec_with_model_on(body, ctx, [1])
+            elif name == "wd":
+                base = spec_with_model_on(body, ctx, [0])
+            elif name in ("w_gate", "w_up", "w_down"):
+                base = spec_with_model_on(body, ctx, [0])      # EP on experts
+                if serve:
+                    b2 = list(base)
+                    for d in (1, 2):
+                        if b2[d] is None and body[d] % ctx.n_batch == 0:
+                            b2[d] = ctx.batch_axes if len(ctx.batch_axes) > 1 else ctx.batch_axes[0]
+                            break
+                    base = tuple(b2)
+            elif name == "wr":
+                base = (None,) * len(body)
+            elif name in ("wz", "wx"):
+                base = spec_with_model_on(body, ctx, [1])
+            elif name == "wo_ssm":
+                base = spec_with_model_on(body, ctx, [0])
+            elif name == "wdt":
+                base = spec_with_model_on(body, ctx, [1])
+            elif name == "conv_w":
+                base = (None,) * len(body)
+            elif name == "norm":
+                base = spec_with_model_on(body, ctx, [0])
+            else:
+                base = (None,) * len(body)
+            return ((None,) * off) + base if stacked else base
+
+        def walk(tree, path=()):  # build spec tree
+            if isinstance(tree, dict):
+                return {k: walk(v, path + (k,)) for k, v in tree.items()}
+            shape, _dtype = tree
+            # mamba wo is (d_inner, D): model on dim0
+            name = path[-1]
+            if name == "wo" and path[0] == "layers" and self.cfg.is_ssm:
+                body = shape[1:]
+                return ctx.ns(None, *spec_with_model_on(body, ctx, [0]))
+            return ctx.ns(*leaf_spec(path, shape))
+
+        return walk(self.param_template())
+
+    # ------------------------------------------------------------- forward
+    def _rope(self, positions, S):
+        cfg = self.cfg
+        hd = cfg.hd
+        if cfg.rope_style == "mrope":
+            return mrope_cos_sin(positions, cfg.mrope_sections, cfg.rope_theta)
+        n_freq = int(hd * cfg.rope_fraction) // 2
+        return rope_cos_sin(positions, n_freq, cfg.rope_theta)
+
+    def _attn(self, lp, x, *, cos, sin, q_pos, k_pos, window, prefix="",
+              kv_override=None, causal=True, ctx=None):
+        cfg = self.cfg
+        g = lambda n: lp[prefix + n]
+        heads_shardable = ctx is not None and (
+            cfg.n_heads % ctx.n_model == 0 or cfg.n_kv_heads % ctx.n_model == 0
+        )
+        if heads_shardable and not self.pure_dp and x.shape[1] > 1:
+            # Megatron-SP: gather the sequence dim ONCE at the attention
+            # entry so q/k/v project straight into head-sharded layouts.
+            # (Constraining k/v after projection makes the partitioner
+            # resort to "involuntary full rematerialization" replication.)
+            # When NO head dim divides the model axis (qwen2-vl: 28H/4KV on
+            # 16) the S-sharded layout IS the parallelism — keep it.
+            x = ctx.constrain(x, ctx.batch_axes, None, None)
+        q = jnp.einsum("bsd,dhk->bshk", x, g("wq"))
+        src = x if kv_override is None else kv_override
+        k = jnp.einsum("bsd,dhk->bshk", src, g("wk"))
+        v = jnp.einsum("bsd,dhk->bshk", src, g("wv"))
+        if cfg.qkv_bias:
+            q = q + g("bq"); k = k + g("bk"); v = v + g("bv")
+        if cfg.qk_norm:
+            q = rms_norm(q, g("qn"), cfg.norm_eps)
+            k = rms_norm(k, g("kn"), cfg.norm_eps)
+        if cos is not None:
+            q = apply_rope(q, cos, sin, cfg.rope_fraction)
+            k = apply_rope(k, cos, sin, cfg.rope_fraction)
+        o = gqa_attention(q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal,
+                          window=window, ctx=None if self.pure_dp else ctx)
+        return jnp.einsum("bshk,hkd->bsd", o, g("wo"))
+
+    def _dense_block(self, lp, h, *, cos, sin, q_pos, k_pos, window, ctx, tok_spec):
+        cfg = self.cfg
+        x = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        h = h + self._attn(lp, x, cos=cos, sin=sin, q_pos=q_pos, k_pos=k_pos,
+                           window=window, ctx=ctx)
+        if ctx is not None:
+            h = ctx.constrain(h, *tok_spec)
+        x2 = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.family == "moe":
+            y, aux = moe_layer(
+                x2, lp["wr"], lp["w_gate"], lp["w_up"], lp["w_down"],
+                top_k=cfg.moe_top_k, capacity_factor=cfg.capacity_factor, ctx=ctx,
+            )
+        else:
+            y = swiglu_mlp(x2, lp["wg"], lp["wu"], lp["wd"])
+        h = h + y
+        if ctx is not None:
+            h = ctx.constrain(h, *tok_spec)
+        return h, aux
+
+    def _run_decoder_stack(self, params, h, *, positions, ctx, shape_kind="train"):
+        """dense/moe/vlm stacks (scan over layers)."""
+        cfg = self.cfg
+        B, S, D = h.shape
+        cos, sin = self._rope(positions, S)
+        q_pos = positions[0, 0] if cfg.rope_style == "mrope" else positions[0]
+        k_pos = q_pos
+        tok_spec = self._tok_spec(ctx) if ctx is not None else None
+        L = cfg.n_layers
+        idxs = jnp.arange(L, dtype=jnp.int32)
+        if cfg.global_every:
+            is_global = (idxs % cfg.global_every) == (cfg.global_every - 1)
+            windows = jnp.where(is_global, jnp.int32(S + 1), jnp.int32(cfg.sliding_window))
+        else:
+            windows = jnp.full((L,), jnp.int32(S + 1))
+
+        def body(carry, xs):
+            h, aux = carry
+            lp, w = xs
+            h, a = self._dense_block(
+                lp, h, cos=cos, sin=sin, q_pos=q_pos, k_pos=k_pos,
+                window=w, ctx=ctx, tok_spec=tok_spec,
+            )
+            return (h, aux + a), None
+
+        body = jax.checkpoint(body, policy=_remat_policy(self))
+        (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                   (params["layers"], windows))
+        return h, aux
+
+    def _run_ssm_stack(self, params, h, ctx):
+        cfg = self.cfg
+        tok_spec = self._tok_spec(ctx) if ctx is not None else None
+
+        def body(carry, lp):
+            h = carry
+            x = rms_norm(h, lp["ln"], cfg.norm_eps)
+            h = h + ssd.mamba2_mixer(lp, x, cfg, ctx)
+            if ctx is not None:
+                h = ctx.constrain(h, *tok_spec)
+            return h, None
+
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        h, _ = jax.lax.scan(body, h, params["layers"])
+        return h, jnp.zeros((), jnp.float32)
+
+    def _run_hybrid_stack(self, params, h, *, positions, ctx):
+        """Zamba2: (shared attn block after every ``shared_attn_every`` Mamba2
+        layers); trailing layers run without a shared block."""
+        cfg = self.cfg
+        E = cfg.shared_attn_every
+        L = cfg.n_layers
+        n_groups, rem = divmod(L, E)
+        tok_spec = self._tok_spec(ctx) if ctx is not None else None
+        S = h.shape[1]
+        cos, sin = self._rope(positions, S)
+        q_pos = positions[0]
+        shared = params["shared"]
+
+        def mamba_body(carry, lp):
+            hh = carry
+            x = rms_norm(hh, lp["ln"], cfg.norm_eps)
+            hh = hh + ssd.mamba2_mixer(lp, x, cfg, ctx)
+            if ctx is not None:
+                hh = ctx.constrain(hh, *tok_spec)
+            return hh, None
+
+        mamba_body = jax.checkpoint(mamba_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def shared_block(hh):
+            x = rms_norm(hh, shared["ln1"], cfg.norm_eps)
+            hh = hh + self._attn(shared, x, cos=cos, sin=sin, q_pos=q_pos,
+                                 k_pos=q_pos, window=None, ctx=ctx)
+            x2 = rms_norm(hh, shared["ln2"], cfg.norm_eps)
+            hh = hh + swiglu_mlp(x2, shared["wg"], shared["wu"], shared["wd"])
+            if ctx is not None:
+                hh = ctx.constrain(hh, *tok_spec)
+            return hh
+
+        grouped = jax.tree.map(
+            lambda a: a[: n_groups * E].reshape(n_groups, E, *a.shape[1:]),
+            params["layers"],
+        )
+
+        def group_body(carry, gp):
+            hh = carry
+            hh, _ = jax.lax.scan(mamba_body, hh, gp)
+            hh = shared_block(hh)
+            return hh, None
+
+        # checkpoint at GROUP granularity: only the 13 group-boundary
+        # activations are saved; the 6 inner mamba layers + shared block
+        # recompute in the backward (the inner per-layer saves would
+        # otherwise stack across groups -> 81 full residual saves).
+        group_body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+        h, _ = jax.lax.scan(group_body, h, grouped)
+        if rem:
+            tail = jax.tree.map(lambda a: a[n_groups * E :], params["layers"])
+            h, _ = jax.lax.scan(mamba_body, h, tail)
+        return h, jnp.zeros((), jnp.float32)
+
+    def _run_encdec(self, params, batch, ctx):
+        cfg = self.cfg
+        audio = batch["audio_embeds"].astype(jnp.bfloat16)
+        tokens = batch["tokens"]
+        B, Sa, D = audio.shape
+        St = tokens.shape[1]
+        tok_spec = self._tok_spec(ctx) if ctx is not None else None
+        # ---- encoder (bidirectional, sinusoidal positions baked in stub) ----
+        pos_a = jnp.arange(Sa, dtype=jnp.int32)[None].repeat(B, 0)
+        h = audio
+
+        def enc_body(carry, lp):
+            hh = carry
+            x = layer_norm(hh, lp["ln1"], lp["b1"], cfg.norm_eps)
+            hh = hh + self._attn(lp, x, cos=None, sin=None, q_pos=pos_a[0],
+                                 k_pos=pos_a[0], window=None, causal=False, ctx=ctx)
+            x2 = layer_norm(hh, lp["ln2"], lp["b2"], cfg.norm_eps)
+            hh = hh + gelu_mlp(x2, lp["wg"], jnp.zeros((), hh.dtype), lp["wd"],
+                               jnp.zeros((), hh.dtype))
+            if ctx is not None:
+                hh = ctx.constrain(hh, *tok_spec)
+            return hh, None
+
+        enc_body = jax.checkpoint(enc_body, policy=_remat_policy(self))
+        h, _ = jax.lax.scan(enc_body, h, params["enc"])
+        enc_out = layer_norm(h, params["enc_final_ln"], params["enc_final_b"], cfg.norm_eps)
+        # ---- decoder ----
+        pos_t = jnp.arange(St, dtype=jnp.int32)
+        emb = params["embed"][tokens] + params["dec_pos"][pos_t][None]
+        hd_ = emb.astype(jnp.bfloat16)
+
+        def dec_body(carry, lp):
+            hh = carry
+            x = layer_norm(hh, lp["ln1"], lp["b1"], cfg.norm_eps)
+            hh = hh + self._attn(lp, x, cos=None, sin=None, q_pos=pos_t,
+                                 k_pos=pos_t, window=None, causal=True, ctx=ctx)
+            x2 = layer_norm(hh, lp["ln2"], lp["b2"], cfg.norm_eps)
+            hh = hh + self._attn(lp, x2, cos=None, sin=None, q_pos=pos_t,
+                                 k_pos=pos_a[0], window=None, causal=False,
+                                 prefix="x", kv_override=enc_out, ctx=ctx)
+            x3 = layer_norm(hh, lp["ln3"], lp["b3"], cfg.norm_eps)
+            hh = hh + gelu_mlp(x3, lp["wg"], jnp.zeros((), hh.dtype), lp["wd"],
+                               jnp.zeros((), hh.dtype))
+            if ctx is not None:
+                hh = ctx.constrain(hh, *tok_spec)
+            return hh, None
+
+        dec_body = jax.checkpoint(dec_body, policy=_remat_policy(self))
+        hd_, _ = jax.lax.scan(dec_body, hd_, params["dec"])
+        return hd_, jnp.zeros((), jnp.float32)
+
+    # ------------------------------------------------------------- loss
+    def _head(self, params, h):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            h = layer_norm(h, params["final_ln"], params["final_b"], cfg.norm_eps)
+        else:
+            h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            return jnp.einsum("bsd,vd->bsv", h, params["embed"])
+        return jnp.einsum("bsd,dv->bsv", h, params["head"])
+
+    def loss_fn(self, params, batch, ctx: MeshCtx | None = None):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            h, aux = self._run_encdec(params, batch, ctx)
+        else:
+            if cfg.embeddings_input:
+                h = batch["embeds"].astype(jnp.bfloat16)
+                positions = batch["positions"]
+            else:
+                tokens = batch["tokens"]
+                h = params["embed"][tokens].astype(jnp.bfloat16)
+                B, S = tokens.shape
+                positions = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+                if cfg.rope_style == "mrope":
+                    positions = jnp.stack([positions] * 3, axis=0)
+            if ctx is not None:
+                h = ctx.constrain(h, *self._tok_spec(ctx))
+            if cfg.family == "ssm":
+                h, aux = self._run_ssm_stack(params, h, ctx)
+            elif cfg.family == "hybrid":
+                h, aux = self._run_hybrid_stack(params, h, positions=positions, ctx=ctx)
+            else:
+                h, aux = self._run_decoder_stack(params, h, positions=positions, ctx=ctx)
+        labels = batch["labels"]
+        ce = self._cross_entropy(params, h, labels, ctx)
+        return ce + 0.01 * aux
+
+    def _cross_entropy(self, params, h, labels, ctx, chunk: int = 128):
+        """CE over the vocab. For production shapes the (B, S, V) f32 logits
+        are the single largest live buffer (2.5 GB/chip at V=152k), so we
+        stream the loss over sequence chunks under remat: peak = one chunk's
+        logits; the head matmul is recomputed chunkwise in the backward."""
+        B, S, D = h.shape
+        if ctx is None or S <= chunk:
+            logits = self._head(params, h).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+            return (lse - ll).mean()
+        n = S // chunk
+        assert S % chunk == 0, (S, chunk)
+        baxes = (*ctx.batch_axes, "model") if self.pure_dp else ctx.batch_axes
+        h = ctx.constrain(h, baxes, None, None)
+        hs = jnp.moveaxis(h.reshape(B, n, chunk, D), 1, 0)
+        ls = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+
+        def body(tot, xs):
+            hc, lc = xs
+            logits = self._head(params, hc).astype(jnp.float32)
+            if ctx is not None:
+                logits = ctx.constrain(
+                    logits, baxes, None, None if self.pure_dp else "model")
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+            return tot + (lse - ll).sum(), None
+
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls))
+        return tot / (B * S)
+
+    # ------------------------------------------------------------- serving
+    def cache_template(self, B: int, S: int) -> dict:
+        cfg = self.cfg
+        bf = jnp.bfloat16
+        KV, hd = cfg.n_kv_heads, cfg.hd
+        if cfg.family in ("dense", "vlm", "moe"):
+            L = cfg.n_layers
+            return {
+                "k": ((L, B, S, KV, hd), bf),
+                "v": ((L, B, S, KV, hd), bf),
+            }
+        if cfg.family == "ssm":
+            L = cfg.n_layers
+            conv_dim = cfg.d_inner + 2 * ssd.G * cfg.ssm_state
+            return {
+                "conv": ((L, B, cfg.conv_kernel - 1, conv_dim), bf),
+                "ssm": ((L, B, ssd.G, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim), jnp.float32),
+            }
+        if cfg.family == "hybrid":
+            L = cfg.n_layers
+            n_groups = L // cfg.shared_attn_every
+            conv_dim = cfg.d_inner + 2 * ssd.G * cfg.ssm_state
+            return {
+                "conv": ((L, B, cfg.conv_kernel - 1, conv_dim), bf),
+                "ssm": ((L, B, ssd.G, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim), jnp.float32),
+                "k": ((n_groups, B, S, KV, hd), bf),
+                "v": ((n_groups, B, S, KV, hd), bf),
+            }
+        if cfg.family == "encdec":
+            L = cfg.n_layers
+            Sa = S // 2
+            return {
+                "k": ((L, B, S, KV, hd), bf),
+                "v": ((L, B, S, KV, hd), bf),
+                "xk": ((L, B, Sa, KV, hd), bf),
+                "xv": ((L, B, Sa, KV, hd), bf),
+            }
+        raise ValueError(cfg.family)
+
+    def cache_specs(self, B: int, S: int, ctx: MeshCtx) -> dict:
+        cfg = self.cfg
+        tmpl = self.cache_template(B, S)
+        out = {}
+        batch_ok = B >= ctx.n_batch and B % ctx.n_batch == 0
+        for name, (shape, _dt) in tmpl.items():
+            spec: list = [None] * len(shape)
+            if batch_ok:
+                spec[1] = ctx.batch_axes
+            if name in ("k", "v", "xk", "xv"):
+                # model axis: kv-heads if divisible, else head_dim, else seq
+                if shape[3] % ctx.n_model == 0:
+                    spec[3] = "model"
+                elif shape[4] % ctx.n_model == 0:
+                    spec[4] = "model"
+                if not batch_ok:
+                    spec[2] = ctx.batch_axes  # sequence sharding (long_500k)
+            else:
+                # ssm/conv states: shard heads / channels on model
+                if name == "ssm" and shape[3] % ctx.n_model == 0:
+                    spec[3] = "model"
+                if name == "conv" and shape[3] % ctx.n_model == 0:
+                    spec[3] = "model"
+            out[name] = ctx.ns(*spec)
+        return out
+
+    def decode_step(self, params, cache, batch, ctx: MeshCtx | None = None):
+        """One token for the whole batch against a seq_len-long cache.
+
+        batch: {"token": (B,) int32 (or "embed": (B, D)), "cur_len": ()} —
+        returns (logits (B, V), new cache).
+        """
+        cfg = self.cfg
+        cur = batch["cur_len"]
+        if cfg.embeddings_input:
+            x = batch["embed"].astype(jnp.bfloat16)
+        else:
+            x = params["embed"][batch["token"]].astype(jnp.bfloat16)
+        B = x.shape[0]
+        if cfg.family == "encdec":
+            x = x + params["dec_pos"][cur][None]
+        h = x[:, None, :]  # (B, 1, D)
+        if cfg.family in ("dense", "vlm", "moe"):
+            h, cache = self._decode_dense(params, cache, h, cur, ctx)
+        elif cfg.family == "ssm":
+            h, cache = self._decode_ssm(params, cache, h, ctx)
+        elif cfg.family == "hybrid":
+            h, cache = self._decode_hybrid(params, cache, h, cur, ctx)
+        elif cfg.family == "encdec":
+            h, cache = self._decode_encdec(params, cache, h, cur, ctx)
+        logits = self._head(params, h)[:, 0].astype(jnp.float32)
+        return logits, cache
+
+    # --- decode stacks ----------------------------------------------------
+    def _decode_attn(self, lp, h, k_cache, v_cache, cur, *, window, prefix=""):
+        cfg = self.cfg
+        S = k_cache.shape[1]  # per-layer cache is (B, S, KV, hd)
+        B = h.shape[0]
+        pos1 = jnp.full((1,), cur, jnp.int32)
+        cos, sin = (None, None)
+        if cfg.rope_style != "none" and cfg.family != "encdec":
+            if cfg.rope_style == "mrope":
+                p3 = jnp.full((3, B, 1), cur, jnp.int32)
+                cos, sin = mrope_cos_sin(p3, cfg.mrope_sections, cfg.rope_theta)
+            else:
+                n_freq = int(cfg.hd * cfg.rope_fraction) // 2
+                cos, sin = rope_cos_sin(pos1[None].repeat(B, 0), n_freq, cfg.rope_theta)
+        x = h
+        g = lambda n: lp[prefix + n]
+        q = jnp.einsum("bsd,dhk->bshk", x, g("wq"))
+        k_new = jnp.einsum("bsd,dhk->bshk", x, g("wk"))
+        v_new = jnp.einsum("bsd,dhk->bshk", x, g("wv"))
+        if cfg.qkv_bias:
+            q = q + g("bq"); k_new = k_new + g("bk"); v_new = v_new + g("bv")
+        if cfg.qk_norm:
+            q = rms_norm(q, g("qn"), cfg.norm_eps)
+            k_new = rms_norm(k_new, g("kn"), cfg.norm_eps)
+        if cos is not None:
+            q = apply_rope(q, cos, sin, cfg.rope_fraction)
+            k_new = apply_rope(k_new, cos, sin, cfg.rope_fraction)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, cur, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, cur, axis=1)
+        k_pos = jnp.arange(S, dtype=jnp.int32)
+        o = gqa_attention(q, k_cache, v_cache, q_pos=pos1, k_pos=k_pos,
+                          causal=True, window=window)
+        return jnp.einsum("bshk,hkd->bsd", o, g("wo")), k_cache, v_cache
+
+    def _decode_dense(self, params, cache, h, cur, ctx):
+        cfg = self.cfg
+        L = cfg.n_layers
+        idxs = jnp.arange(L, dtype=jnp.int32)
+        S = cache["k"].shape[2]
+        if cfg.global_every:
+            is_global = (idxs % cfg.global_every) == (cfg.global_every - 1)
+            windows = jnp.where(is_global, jnp.int32(S + 1), jnp.int32(cfg.sliding_window))
+        else:
+            windows = jnp.full((L,), jnp.int32(S + 1))
+
+        def body(carry, xs):
+            hh = carry
+            lp, kc, vc, w = xs
+            x = rms_norm(hh, lp["ln1"], cfg.norm_eps)
+            a, kc, vc = self._decode_attn(lp, x, kc, vc, cur, window=w)
+            hh = hh + a
+            x2 = rms_norm(hh, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                y, _ = moe_layer(
+                    x2, lp["wr"], lp["w_gate"], lp["w_up"], lp["w_down"],
+                    top_k=cfg.moe_top_k, capacity_factor=cfg.capacity_factor, ctx=ctx,
+                )
+            else:
+                y = swiglu_mlp(x2, lp["wg"], lp["wu"], lp["wd"])
+            return hh + y, (kc, vc)
+
+        h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], cache["k"], cache["v"], windows))
+        return h, {"k": ks, "v": vs}
+
+    def _decode_ssm(self, params, cache, h, ctx):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            hh = carry
+            lp, conv, ssm_st = xs
+            x = rms_norm(hh, lp["ln"], cfg.norm_eps)
+            y, conv, ssm_st = ssd.mamba2_decode_step(lp, x[:, 0], conv, ssm_st, cfg)
+            return hh + y[:, None], (conv, ssm_st)
+
+        h, (convs, ssms) = jax.lax.scan(body, h, (params["layers"], cache["conv"], cache["ssm"]))
+        return h, {"conv": convs, "ssm": ssms}
+
+    def _decode_hybrid(self, params, cache, h, cur, ctx):
+        cfg = self.cfg
+        E = cfg.shared_attn_every
+        L = cfg.n_layers
+        n_groups, rem = divmod(L, E)
+        shared = params["shared"]
+
+        def mamba_step(hh, lp, conv, ssm_st):
+            x = rms_norm(hh, lp["ln"], cfg.norm_eps)
+            y, conv, ssm_st = ssd.mamba2_decode_step(lp, x[:, 0], conv, ssm_st, cfg)
+            return hh + y[:, None], conv, ssm_st
+
+        grouped = jax.tree.map(
+            lambda a: a[: n_groups * E].reshape(n_groups, E, *a.shape[1:]),
+            params["layers"],
+        )
+        gconv = cache["conv"][: n_groups * E].reshape(n_groups, E, *cache["conv"].shape[1:])
+        gssm = cache["ssm"][: n_groups * E].reshape(n_groups, E, *cache["ssm"].shape[1:])
+
+        def group_body(carry, xs):
+            hh = carry
+            gp, cv, sm, kc, vc = xs
+
+            def inner(c2, xs2):
+                h2 = c2
+                lp, cv2, sm2 = xs2
+                h2, cv2, sm2 = mamba_step(h2, lp, cv2, sm2)
+                return h2, (cv2, sm2)
+
+            hh, (cv, sm) = jax.lax.scan(inner, hh, (gp, cv, sm))
+            x = rms_norm(hh, shared["ln1"], cfg.norm_eps)
+            a, kc, vc = self._decode_attn(shared, x, kc, vc, cur, window=None)
+            hh = hh + a
+            x2 = rms_norm(hh, shared["ln2"], cfg.norm_eps)
+            hh = hh + swiglu_mlp(x2, shared["wg"], shared["wu"], shared["wd"])
+            return hh, (cv, sm, kc, vc)
+
+        h, (cv, sm, ks, vs) = jax.lax.scan(
+            group_body, h, (grouped, gconv, gssm, cache["k"], cache["v"])
+        )
+        new_conv = cv.reshape(n_groups * E, *cache["conv"].shape[1:])
+        new_ssm = sm.reshape(n_groups * E, *cache["ssm"].shape[1:])
+        if rem:
+            tail = jax.tree.map(lambda a: a[n_groups * E :], params["layers"])
+
+            def inner(c2, xs2):
+                h2 = c2
+                lp, cv2, sm2 = xs2
+                h2, cv2, sm2 = mamba_step(h2, lp, cv2, sm2)
+                return h2, (cv2, sm2)
+
+            h, (cvt, smt) = jax.lax.scan(
+                inner, h, (tail, cache["conv"][n_groups * E :], cache["ssm"][n_groups * E :])
+            )
+            new_conv = jnp.concatenate([new_conv, cvt], axis=0)
+            new_ssm = jnp.concatenate([new_ssm, smt], axis=0)
+        return h, {"conv": new_conv, "ssm": new_ssm, "k": ks, "v": vs}
+
+    def _decode_encdec(self, params, cache, h, cur, ctx):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            hh = carry
+            lp, kc, vc, xk, xv = xs
+            x = layer_norm(hh, lp["ln1"], lp["b1"], cfg.norm_eps)
+            a, kc, vc = self._decode_attn(lp, x, kc, vc, cur, window=None)
+            hh = hh + a
+            # cross attention against the (precomputed) encoder KV
+            x2 = layer_norm(hh, lp["ln2"], lp["b2"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", x2, lp["xwq"])
+            Sa = xk.shape[1]
+            o = gqa_attention(q, xk, xv, q_pos=jnp.zeros((1,), jnp.int32),
+                              k_pos=jnp.arange(Sa, dtype=jnp.int32), causal=False,
+                              window=None)
+            hh = hh + jnp.einsum("bshk,hkd->bsd", o, lp["xwo"])
+            x3 = layer_norm(hh, lp["ln3"], lp["b3"], cfg.norm_eps)
+            hh = hh + gelu_mlp(x3, lp["wg"], jnp.zeros((), hh.dtype), lp["wd"],
+                               jnp.zeros((), hh.dtype))
+            return hh, (kc, vc)
+
+        h, (ks, vs) = jax.lax.scan(
+            body, h, (params["dec"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+        )
+        return h, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}

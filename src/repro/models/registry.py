@@ -1,0 +1,66 @@
+"""Model construction + input specs per (arch, shape)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.lm import LM
+
+
+def build_model(cfg: ArchConfig, max_pos: int = 4096) -> LM:
+    return LM(cfg, max_pos=max_pos)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run; no device
+    allocation). Modality frontends are stubs: VLM/audio provide precomputed
+    patch/frame embeddings (see assignment note)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32, bf = jnp.int32, jnp.bfloat16
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            return {
+                "audio_embeds": jax.ShapeDtypeStruct((B, S // 2, cfg.d_model), bf),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        if cfg.embeddings_input:
+            return {
+                "embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), bf),
+                "positions": jax.ShapeDtypeStruct((3, B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    # decode: one new token against a seq_len cache
+    out = {"cur_len": jax.ShapeDtypeStruct((), i32)}
+    if cfg.embeddings_input:
+        out["embed"] = jax.ShapeDtypeStruct((B, cfg.d_model), bf)
+    else:
+        out["token"] = jax.ShapeDtypeStruct((B,), i32)
+    return out
+
+
+def make_inputs(cfg: ArchConfig, shape: ShapeConfig, seed: int = 0) -> dict:
+    """Real (random) arrays matching input_specs — smoke tests / examples."""
+    rng = np.random.default_rng(seed)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, sd in specs.items():
+        if sd.dtype == jnp.int32:
+            hi = cfg.vocab if k in ("tokens", "labels", "token") else max(2, shape.seq_len)
+            if k == "cur_len":
+                out[k] = jnp.asarray(shape.seq_len // 2, jnp.int32)
+            else:
+                out[k] = jnp.asarray(
+                    rng.integers(0, hi, sd.shape, dtype=np.int32)
+                )
+        else:
+            out[k] = jnp.asarray(
+                rng.standard_normal(sd.shape).astype(np.float32) * 0.02
+            ).astype(sd.dtype)
+    return out

@@ -1,0 +1,192 @@
+"""Mamba2 / SSD mixer (state-space duality, arXiv:2405.21060).
+
+Chunked SSD: sequence is split into Q-sized chunks; the quadratic intra-chunk
+term runs on the MXU (einsums), inter-chunk state flows through a sequential
+``lax.scan`` carrying the (B, H, N, P) state — O(L·Q) compute, O(L/Q) scan
+steps. Decode is the pure SSM recurrence (O(1) state update per token).
+
+Parameter layout per layer (stacked leading L axis handled by the caller):
+  wz, wx (D, d_inner) | wB, wC (D, G*N) | wdt (D, H) | dt_bias (H,)
+  A_log (H,) | Dskip (H,) | conv_w (K, conv_dim) | norm (d_inner,)
+  wo (d_inner, D)        with conv_dim = d_inner + 2*G*N, G = 1 group.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+G = 1  # B/C groups (mamba2 default ngroups=1)
+
+
+def _causal_conv(u, w):
+    """Depthwise causal conv1d: u (B, L, C), w (K, C) -> (B, L, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for j in range(K):  # K=4: unrolled shifted adds
+        out = out + pad[:, j : j + u.shape[1], :].astype(jnp.float32) * w[j].astype(jnp.float32)
+    return out.astype(u.dtype)
+
+
+def _split_heads(t, G_, rest):
+    B, L = t.shape[:2]
+    return t.reshape(B, L, G_, *rest)
+
+
+def mamba2_mixer(p, x, cfg: ArchConfig, ctx=None):
+    """x (B, L, D) -> (B, L, D). Chunked SSD over the full sequence."""
+    B, L, D = x.shape
+    H = cfg.ssm_heads
+    P = cfg.ssm_headdim
+    N = cfg.ssm_state
+    Q = min(cfg.ssm_chunk, L)
+    assert L % Q == 0, (L, Q)
+    nC = L // Q
+
+    z = jnp.einsum("bld,de->ble", x, p["wz"])
+    xin = jnp.einsum("bld,de->ble", x, p["wx"])
+    Bp = jnp.einsum("bld,dn->bln", x, p["wB"])
+    Cp = jnp.einsum("bld,dn->bln", x, p["wC"])
+    dt_raw = jnp.einsum("bld,dh->blh", x, p["wdt"])
+    xBC = jnp.concatenate([xin, Bp, Cp], axis=-1)
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"]).astype(jnp.float32)).astype(x.dtype)
+    d_in = cfg.d_inner
+    xin = xBC[..., :d_in]
+    Bp = xBC[..., d_in : d_in + G * N]
+    Cp = xBC[..., d_in + G * N :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (H,)
+    xh = xin.reshape(B, L, H, P)
+    if ctx is not None:
+        # head parallelism: every SSD tensor shards over heads on "model"
+        # (B/C are head-shared and stay replicated) — keeps the per-chunk
+        # state residuals the backward saves at 1/n_model size.
+        xh = ctx.constrain(xh, ctx.batch_axes, None, "model", None)
+        dt = ctx.constrain(dt, ctx.batch_axes, None, "model")
+    y = _ssd_chunked(xh, dt, A, Bp.reshape(B, L, G, N), Cp.reshape(B, L, G, N), Q,
+                     ctx=ctx)
+    y = y + xh.astype(jnp.float32) * p["Dskip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, L, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    # group RMSNorm over d_inner
+    y32 = y.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(y32 * y32, axis=-1, keepdims=True) + cfg.norm_eps)
+    y = (y32 * inv * (1.0 + p["norm"].astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("ble,ed->bld", y, p["wo"])
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, Q, ctx=None):
+    """Minimal-SSD. x (B,L,H,P) f*, dt (B,L,H) f32, A (H,), Bm/Cm (B,L,G,N).
+
+    Returns y (B, L, H, P) f32.
+    """
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    nC = L // Q
+    Hg = H // G
+    state_spec = None
+    if ctx is not None and Hg % ctx.n_model == 0:
+        state_spec = (ctx.batch_axes, None, "model", None, None)  # (B,G,Hg,N,P)
+    # chunked views
+    xc = x.reshape(B, nC, Q, G, Hg, P).astype(jnp.float32)
+    dtc = dt.reshape(B, nC, Q, G, Hg)
+    Bc = Bm.reshape(B, nC, Q, G, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nC, Q, G, N).astype(jnp.float32)
+    a = dtc * A.reshape(1, 1, 1, G, Hg)                    # (B,C,Q,G,Hg) <= 0
+    cum = jnp.cumsum(a, axis=2)                            # running log-decay
+    # move chunk axis first for scan
+    xs = (
+        jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0), jnp.moveaxis(Bc, 1, 0),
+        jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(cum, 1, 0),
+    )
+    state0 = jnp.zeros((B, G, Hg, N, P), jnp.float32)
+
+    def body(state, chunk):
+        xq, dtq, Bq, Cq, cumq = chunk
+        if state_spec is not None:
+            state = jax.lax.with_sharding_constraint(
+                state, ctx.ns(*state_spec)
+            )
+            xq = jax.lax.with_sharding_constraint(
+                xq, ctx.ns(ctx.batch_axes, None, None, "model", None)
+            )  # (B,Q,G,Hg,P)
+        # intra-chunk (quadratic in Q)
+        scores = jnp.einsum("bqgn,bkgn->bgqk", Cq, Bq)
+        # seg[b,q,k,g,h] = cum[q] - cum[k]  (log-decay between positions).
+        # Mask BEFORE exp: upper-triangle seg is large-positive and exp would
+        # overflow, leaking NaN through where()'s gradient.
+        seg = cumq[:, :, None, :, :] - cumq[:, None, :, :, :]
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        seg = jnp.where(causal[None, :, :, None, None], seg, -1e30)
+        Lmat = jnp.exp(seg)
+        M = scores.transpose(0, 2, 3, 1)[..., :, None] * Lmat  # (B,Q,K,G,Hg)
+        y_intra = jnp.einsum("bqkgh,bkgh,bkghp->bqghp", M, dtq, xq)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bqgn,bghnp,bqgh->bqghp", Cq, state, jnp.exp(cumq))
+        # state update
+        decay_to_end = jnp.exp(cumq[:, -1:, :, :] - cumq)      # (B,Q,G,Hg)
+        s_new = jnp.einsum("bkgn,bkgh,bkghp->bghnp", Bq, dtq * decay_to_end, xq)
+        state = jnp.exp(cumq[:, -1])[:, :, :, None, None] * state + s_new
+        return state, y_intra + y_inter
+
+    _, ys = jax.lax.scan(body, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, L, G * Hg, P)
+    return y
+
+
+def mamba2_decode_step(p, x, conv_state, ssm_state, cfg: ArchConfig):
+    """Single-token recurrence. x (B, D); conv_state (B, K-1, conv_dim);
+    ssm_state (B, G, Hg, N, P). Returns (y (B, D), conv_state', ssm_state')."""
+    B, D = x.shape
+    H, Pd, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    Hg = H // G
+    d_in = cfg.d_inner
+    z = jnp.einsum("bd,de->be", x, p["wz"])
+    xin = jnp.einsum("bd,de->be", x, p["wx"])
+    Bp = jnp.einsum("bd,dn->bn", x, p["wB"])
+    Cp = jnp.einsum("bd,dn->bn", x, p["wC"])
+    dt_raw = jnp.einsum("bd,dh->bh", x, p["wdt"])
+    xBC = jnp.concatenate([xin, Bp, Cp], axis=-1)              # (B, conv_dim)
+    # conv over [state ; new]
+    K = p["conv_w"].shape[0]
+    window = jnp.concatenate([conv_state, xBC[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    xBC = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = window[:, 1:, :]
+    xin = xBC[:, :d_in]
+    Bp = xBC[:, d_in : d_in + G * N].reshape(B, G, N)
+    Cp = xBC[:, d_in + G * N :].reshape(B, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dth = dt.reshape(B, G, Hg)
+    xh = xin.reshape(B, G, Hg, Pd).astype(jnp.float32)
+    decay = jnp.exp(dth * A.reshape(1, G, Hg))                 # (B,G,Hg)
+    upd = jnp.einsum("bgn,bgh,bghp->bghnp", Bp.astype(jnp.float32), dth, xh)
+    ssm_state = decay[..., None, None] * ssm_state + upd
+    y = jnp.einsum("bgn,bghnp->bghp", Cp.astype(jnp.float32), ssm_state)
+    y = y + xh * p["Dskip"].astype(jnp.float32).reshape(1, G, Hg, 1)
+    y = y.reshape(B, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    inv = jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + cfg.norm_eps)
+    y = (y * inv * (1.0 + p["norm"].astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("be,ed->bd", y, p["wo"]), new_conv, ssm_state
+
+
+def mamba2_param_shapes(cfg: ArchConfig) -> dict:
+    D, d_in, H, N = cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    conv_dim = d_in + 2 * G * N
+    K = cfg.conv_kernel
+    f32, bf = jnp.float32, jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "wz": ((D, d_in), bf), "wx": ((D, d_in), bf),
+        "wB": ((D, G * N), bf), "wC": ((D, G * N), bf),
+        "wdt": ((D, H), bf), "dt_bias": ((H,), f32),
+        "A_log": ((H,), f32), "Dskip": ((H,), f32),
+        "conv_w": ((K, conv_dim), bf), "norm": ((d_in,), f32),
+        "wo": ((d_in, D), bf),
+    }

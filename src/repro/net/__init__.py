@@ -1,0 +1,12 @@
+from repro.net.sim import (
+    RPC,
+    Join,
+    LatencyModel,
+    Network,
+    OpFuture,
+    Server,
+    Sleep,
+    nbytes,
+)
+
+__all__ = ["Network", "Server", "RPC", "Join", "Sleep", "OpFuture", "LatencyModel", "nbytes"]

@@ -1,0 +1,294 @@
+"""Deterministic discrete-event asynchronous network simulator.
+
+The paper evaluates on Emulab (emulated LAN) and AWS EC2 (real WAN). This
+module provides the third option used throughout this repo: a **virtual-time
+event simulator** with per-message latency = base ~ U[lo, hi] + size/bandwidth
+(+ optional jitter/drops), crash/recover injection, and size-aware payload
+accounting. Virtual time makes every benchmark deterministic and lets the
+test-suite check linearizability/coverability against recorded histories —
+something a live testbed cannot do.
+
+Programming model
+-----------------
+*Servers* are objects with a synchronous ``handle(sender, msg) -> reply``.
+*Client operations* are Python generators that ``yield`` effects:
+
+    replies = yield RPC(dests=[...], msg=(...), need=q)   # quorum round-trip
+    yield Sleep(0.01)                                     # backoff
+
+``yield from`` composes sub-protocols (a CoARES write yields from read-config,
+which yields from per-config RPCs, ...). ``Network.spawn`` turns a generator
+into an ``OpFuture``; ``Network.run`` drives the event loop to quiescence.
+Replies arriving after a quorum resumed the generator are delivered to the
+runner and ignored — exactly the paper's "wait for a quorum, ignore the rest".
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Generator, Iterable
+
+import numpy as np
+
+
+def nbytes(obj: Any) -> int:
+    """Approximate wire size of a message payload (drives latency model)."""
+    if obj is None:
+        return 1
+    if isinstance(obj, (bytes, bytearray, memoryview)):
+        return len(obj)
+    if isinstance(obj, str):
+        return len(obj)
+    if isinstance(obj, (int, float)):
+        return 8
+    if isinstance(obj, bool):
+        return 1
+    if isinstance(obj, (tuple, list, set, frozenset)):
+        return 16 + sum(nbytes(x) for x in obj)
+    if isinstance(obj, dict):
+        return 16 + sum(nbytes(k) + nbytes(v) for k, v in obj.items())
+    if hasattr(obj, "wire_size"):
+        return int(obj.wire_size())
+    return 64
+
+
+@dataclass
+class LatencyModel:
+    """Virtual-time cost model (defaults roughly calibrated to a 1 GbE LAN —
+    the paper's Emulab setup; see benchmarks for the AWS-ish WAN variant)."""
+
+    base_lo: float = 0.2e-3          # per-message propagation floor (s)
+    base_hi: float = 0.8e-3
+    bandwidth: float = 125e6         # bytes/s (1 Gbit/s)
+    drop_prob: float = 0.0
+    server_compute: float = 20e-6    # per-message server handling (s)
+    # client-side compute models (per byte, s):
+    enc_per_byte: float = 0.6e-9     # RS encode  (§VI: encode faster ...)
+    dec_per_byte: float = 1.2e-9     # RS decode  (... than decode)
+    bi_per_byte: float = 1.0e-9      # FM block identification (rabin/gear+match)
+
+    def msg_delay(self, rng: np.random.Generator, size: int) -> float:
+        return float(rng.uniform(self.base_lo, self.base_hi)) + size / self.bandwidth
+
+
+@dataclass
+class RPC:
+    """Send ``msg`` to every server in ``dests``; resume the op generator once
+    ``need`` distinct servers replied. The generator receives ``{sid: reply}``.
+
+    ``per_dest`` (optional) overrides ``msg`` per server — used by the EC
+    put-data, which ships a *different coded fragment* to each server."""
+
+    dests: tuple
+    msg: Any
+    need: int
+    # extra client-side compute charged before sending (e.g. encode cost)
+    pre_delay: float = 0.0
+    per_dest: dict | None = None
+
+
+@dataclass
+class Sleep:
+    duration: float
+
+
+@dataclass
+class Join:
+    """Run child operation generators CONCURRENTLY; resume the parent with
+    the list of their results (in order). Used by the indexed Fragmentation
+    Module to issue block reads/writes in parallel (EXPERIMENTS.md §Perf,
+    storage iteration)."""
+
+    children: list
+
+
+@dataclass
+class OpFuture:
+    op_id: int
+    kind: str = ""
+    client: str = ""
+    start: float = 0.0
+    end: float = 0.0
+    done: bool = False
+    result: Any = None
+
+    @property
+    def latency(self) -> float:
+        return self.end - self.start
+
+
+class Server:
+    """Base class: subclasses implement ``handle``; crash state lives here."""
+
+    def __init__(self, sid: str):
+        self.sid = sid
+        self.crashed = False
+
+    def handle(self, sender: str, msg: Any) -> Any:  # pragma: no cover
+        raise NotImplementedError
+
+
+class Network:
+    def __init__(self, seed: int = 0, latency: LatencyModel | None = None):
+        self.rng = np.random.default_rng(seed)
+        self.latency = latency or LatencyModel()
+        self.now = 0.0
+        self._events: list[tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self.servers: dict[str, Server] = {}
+        self.futures: list[OpFuture] = []
+        self._op_ids = itertools.count()
+        self.msg_count = 0
+        self.bytes_sent = 0
+
+    # -- topology ------------------------------------------------------------
+    def add_server(self, server: Server) -> None:
+        self.servers[server.sid] = server
+
+    def crash(self, sid: str) -> None:
+        self.servers[sid].crashed = True
+
+    def recover(self, sid: str) -> None:
+        self.servers[sid].crashed = False
+
+    def alive(self) -> list[str]:
+        return [s for s, srv in self.servers.items() if not srv.crashed]
+
+    # -- event loop ------------------------------------------------------------
+    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._events, (self.now + delay, next(self._seq), fn))
+
+    def run(self, until: float | None = None, max_events: int = 50_000_000) -> None:
+        n = 0
+        while self._events and n < max_events:
+            t, _, fn = self._events[0]
+            if until is not None and t > until:
+                break
+            heapq.heappop(self._events)
+            self.now = t
+            fn()
+            n += 1
+        if n >= max_events:  # pragma: no cover
+            raise RuntimeError("simulator event budget exhausted (livelock?)")
+
+    # -- op driving ------------------------------------------------------------
+    def spawn(
+        self,
+        gen: Generator,
+        kind: str = "",
+        client: str = "",
+        delay: float = 0.0,
+        on_done: Callable[[OpFuture], None] | None = None,
+    ) -> OpFuture:
+        fut = OpFuture(op_id=next(self._op_ids), kind=kind, client=client)
+        self.futures.append(fut)
+
+        def start() -> None:
+            fut.start = self.now
+            self._step(gen, fut, None, on_done)
+
+        self.schedule(delay, start)
+        return fut
+
+    def run_op(self, gen: Generator, **kw) -> Any:
+        """Convenience: spawn one op, run to quiescence, return its result."""
+        fut = self.spawn(gen, **kw)
+        self.run()
+        if not fut.done:
+            raise RuntimeError(f"operation {fut.kind or fut.op_id} did not terminate")
+        return fut.result
+
+    # -- internals ------------------------------------------------------------
+    def _step(
+        self,
+        gen: Generator,
+        fut: OpFuture,
+        send_value: Any,
+        on_done: Callable[[OpFuture], None] | None,
+    ) -> None:
+        try:
+            effect = gen.send(send_value)
+        except StopIteration as stop:
+            fut.done = True
+            fut.end = self.now
+            fut.result = stop.value
+            if on_done is not None:
+                on_done(fut)
+            return
+        if isinstance(effect, Sleep):
+            self.schedule(effect.duration, lambda: self._step(gen, fut, None, on_done))
+        elif isinstance(effect, RPC):
+            self._run_rpc(effect, gen, fut, on_done)
+        elif isinstance(effect, Join):
+            n = len(effect.children)
+            if n == 0:
+                self.schedule(0.0, lambda: self._step(gen, fut, [], on_done))
+                return
+            results = [None] * n
+            state = {"left": n}
+
+            def make_done(i):
+                def done(child_fut):
+                    results[i] = child_fut.result
+                    state["left"] -= 1
+                    if state["left"] == 0:
+                        self._step(gen, fut, results, on_done)
+                return done
+
+            for i, child in enumerate(effect.children):
+                self.spawn(child, client=fut.client, on_done=make_done(i))
+        else:  # pragma: no cover
+            raise TypeError(f"unknown effect {effect!r}")
+
+    def _run_rpc(
+        self,
+        rpc: RPC,
+        gen: Generator,
+        fut: OpFuture,
+        on_done: Callable[[OpFuture], None] | None,
+    ) -> None:
+        replies: dict[str, Any] = {}
+        state = {"resumed": False}
+        need = min(rpc.need, len(rpc.dests))
+
+        def deliver_reply(sid: str, reply: Any) -> None:
+            if state["resumed"]:
+                return  # late reply past the quorum: ignored
+            replies[sid] = reply
+            if len(replies) >= need:
+                state["resumed"] = True
+                self._step(gen, fut, dict(replies), on_done)
+
+        def send_all() -> None:
+            for sid in rpc.dests:
+                srv = self.servers.get(sid)
+                if srv is None:
+                    continue
+                msg = rpc.msg if rpc.per_dest is None else rpc.per_dest[sid]
+                self.msg_count += 1
+                size = nbytes(msg)
+                self.bytes_sent += size
+                if self.rng.random() < self.latency.drop_prob:
+                    continue
+                delay = self.latency.msg_delay(self.rng, size)
+
+                def arrive(srv=srv, sid=sid, msg=msg) -> None:
+                    if srv.crashed:
+                        return
+                    reply = srv.handle(fut.client, msg)
+                    if reply is None:
+                        return
+                    rsize = nbytes(reply)
+                    self.msg_count += 1
+                    self.bytes_sent += rsize
+                    if self.rng.random() < self.latency.drop_prob:
+                        return
+                    rdelay = self.latency.server_compute + self.latency.msg_delay(
+                        self.rng, rsize
+                    )
+                    self.schedule(rdelay, lambda: deliver_reply(sid, reply))
+
+                self.schedule(delay, arrive)
+
+        self.schedule(rpc.pre_delay, send_all)

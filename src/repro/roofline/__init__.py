@@ -1,0 +1,8 @@
+from repro.roofline.analysis import (
+    V5E,
+    HardwareSpec,
+    collective_bytes_from_hlo,
+    roofline_report,
+)
+
+__all__ = ["V5E", "HardwareSpec", "collective_bytes_from_hlo", "roofline_report"]

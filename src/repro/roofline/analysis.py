@@ -1,0 +1,158 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+  compute    = HLO_FLOPs / peak_FLOPs            (per chip: SPMD module)
+  memory     = HLO_bytes / HBM_bw
+  collective = Σ collective result bytes / link_bw
+
+``cost_analysis()`` supplies FLOPs/bytes; collective bytes are *not* in
+cost_analysis, so we parse the optimized HLO text and sum the result-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. Hardware: TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str = "tpu_v5e"
+    peak_flops: float = 197e12      # bf16 per chip
+    hbm_bw: float = 819e9           # bytes/s per chip
+    link_bw: float = 50e9           # bytes/s per ICI link
+    hbm_bytes: float = 16e9
+
+
+V5E = HardwareSpec()
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+# one HLO instruction result: "%name = <shape-or-tuple> <op>(" ; shapes like
+# f32[16,128]{1,0} or tuples (f32[2]{0}, bf16[4,4]{1,0})
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w]+\[[\d,]*\][^\s]*)\s+([\w-]+)(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(shape_txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, int]:
+    """Sum result bytes per collective op kind over the (optimized) HLO.
+
+    Async pairs (``-start``/``-done``) are counted once (on -start; -done
+    results alias). ``while``-loop bodies are static text — a collective
+    inside a scanned loop body appears once; multiply by trip count is NOT
+    attempted (XLA hoists per-layer collectives into the unrolled/scanned
+    body exactly once per step), so figures are per-executed-iteration lower
+    bounds plus top-level ops. For roofline ranking this is the comparable
+    quantity across configs; trip-count weighting is applied upstream where
+    the scan length is known.
+    """
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:  # async completion: result aliases the -start
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        shape_txt, op = m.group(1), m.group(2)
+        base = op
+        for c in _COLLECTIVES:
+            if base == c or base == c + "-start":
+                out[c] = out.get(c, 0) + _shape_bytes(shape_txt)
+                break
+    return out
+
+
+def scan_weighted_collective_bytes(hlo_text: str) -> tuple[dict[str, int], dict]:
+    """Weight collectives inside `while` bodies by their trip count.
+
+    XLA compiles a lax.scan to a while-loop whose body text appears once; a
+    collective there executes trip_count times. We detect computations used
+    as while bodies, extract trip counts from the canonical induction-
+    variable pattern, and weight accordingly.
+    """
+    # map computation name -> its text block
+    blocks: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*%?([\w.\-]+)\s*\([^)]*\)\s*->", line)
+        if line.startswith("ENTRY") :
+            cur = "__entry__"
+            blocks[cur] = []
+            continue
+        if m and ("{" in line or line.rstrip().endswith("{")):
+            cur = m.group(1)
+            blocks[cur] = []
+            continue
+        if cur is not None:
+            blocks[cur].append(line)
+    # find while instructions: body=%name, and trip counts from constants
+    weights: dict[str, int] = {}
+    for name, lines in blocks.items():
+        for line in lines:
+            wm = re.search(r"while\(.*\).*body=%?([\w.\-]+)", line)
+            if wm:
+                tc = 1
+                tm = re.search(r'trip_count["\s:=]+(\d+)', line)
+                if tm:
+                    tc = int(tm.group(1))
+                weights[wm.group(1)] = max(weights.get(wm.group(1), 1), tc)
+    totals: dict[str, int] = {}
+    details = {"while_bodies": weights}
+    for name, lines in blocks.items():
+        w = weights.get(name, 1)
+        text = "\n".join(lines)
+        for op, b in collective_bytes_from_hlo(text).items():
+            totals[op] = totals.get(op, 0) + b * w
+    return totals, details
+
+
+def roofline_report(
+    *,
+    flops: float,
+    bytes_accessed: float,
+    collective_bytes: float,
+    n_chips: int,
+    model_flops: float,
+    hw: HardwareSpec = V5E,
+    links_per_chip: int = 4,
+) -> dict:
+    """All terms in seconds-per-step, per chip (SPMD module == one chip)."""
+    t_compute = flops / hw.peak_flops
+    t_memory = bytes_accessed / hw.hbm_bw
+    t_coll = collective_bytes / (hw.link_bw * links_per_chip)
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    useful = model_flops / max(1.0, flops * n_chips)
+    return {
+        **terms,
+        "dominant": dom,
+        "step_time_lower_bound": bound,
+        "mfu_upper_bound": (model_flops / n_chips / hw.peak_flops) / bound if bound else 0.0,
+        "model_flops_ratio": useful,
+    }

@@ -1,0 +1,300 @@
+"""Scan-weighted HLO analysis (FLOPs / HBM bytes / collective bytes).
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, so a lax.scan
+over 48 layers under-reports FLOPs by ~48x. We therefore parse the optimized
+HLO text ourselves:
+
+  1. split into computation blocks; find `while` instrs, their `body=`/
+     `condition=` computations and `known_trip_count` backend configs;
+  2. propagate multiplicative weights through the (body) call graph
+     (nested scans multiply);
+  3. count, per block and weighted:
+       * dot FLOPs        = 2 * prod(result dims) * prod(lhs contracting dims)
+       * HBM bytes        = result + operand bytes of every instruction in
+                            non-fusion computations (fusion call sites count
+                            their external operands/results — fusion
+                            internals never touch HBM, which makes this a
+                            *better* memory model than per-op cost_analysis)
+       * collective bytes = per-kind wire-traffic model:
+           all-gather / all-to-all / collective-permute -> result bytes
+           reduce-scatter                               -> operand bytes
+           all-reduce                                   -> 2 x result bytes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(txt: str) -> list[list[int]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append([int(d) for d in dims.split(",")] if dims else [])
+    return out
+
+
+@dataclass
+class Instr:
+    name: str
+    result_txt: str
+    op: str
+    line: str
+
+
+@dataclass
+class Block:
+    name: str
+    instrs: list = field(default_factory=list)
+
+
+_OP_RE = re.compile(
+    r"^(?:\([^=]*\)|[\w\[\]{},:\/\* ]+?)\s+([\w\-]+)\(")
+
+
+def parse_blocks(hlo: str) -> tuple[dict[str, Block], str]:
+    blocks: dict[str, Block] = {}
+    entry = None
+    cur: Block | None = None
+    for line in hlo.splitlines():
+        if not line:
+            continue
+        if not line[0].isspace():
+            if line.startswith("ENTRY"):
+                m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+                name = m.group(1) if m else "__entry__"
+                entry = name
+                cur = blocks.setdefault(name, Block(name))
+            elif line.startswith("%"):
+                m = re.match(r"%([\w.\-]+)", line)
+                cur = blocks.setdefault(m.group(1), Block(m.group(1)))
+            else:
+                cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        # op name: token immediately before the first '(' after the result
+        # shape(s). Strip a leading tuple-or-shape.
+        op = None
+        rest2 = rest
+        if rest2.startswith("("):
+            depth = 0
+            for i, ch in enumerate(rest2):
+                depth += ch == "("
+                depth -= ch == ")"
+                if depth == 0:
+                    rest2 = rest2[i + 1 :].strip()
+                    break
+        else:
+            sp = rest2.find(" ")
+            rest2 = rest2[sp + 1 :] if sp >= 0 else ""
+        om = re.match(r"([\w\-]+)\(", rest2.strip())
+        op = om.group(1) if om else ""
+        result_txt = rest[: len(rest) - len(rest2)] if rest2 else rest
+        cur.instrs.append(Instr(name, result_txt, op, line))
+    return blocks, entry
+
+
+def analyze(hlo: str) -> dict:
+    blocks, entry = parse_blocks(hlo)
+    name2result: dict[str, str] = {}
+    fusion_called: set[str] = set()
+    body_edges: dict[str, list[tuple[str, int]]] = {}
+    for b in blocks.values():
+        for ins in b.instrs:
+            name2result[ins.name] = ins.result_txt
+            if ins.op == "fusion":
+                fm = re.search(r"calls=%?([\w.\-]+)", ins.line)
+                if fm:
+                    fusion_called.add(fm.group(1))
+            if ins.op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ins.line)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                tm = re.search(r'known_trip_count[^0-9]*(\d+)', ins.line)
+                trip = int(tm.group(1)) if tm else 1
+                body_edges.setdefault(b.name, []).append((bm.group(1), trip))
+                if cm:
+                    body_edges.setdefault(b.name, []).append((cm.group(1), trip))
+            if ins.op == "conditional":
+                for br in re.findall(r"(?:branch_computations=\{([^}]*)\}|true_computation=%?([\w.\-]+)|false_computation=%?([\w.\-]+))", ins.line):
+                    for part in br:
+                        for nm in re.findall(r"%?([\w.\-]+)", part or ""):
+                            if nm in blocks:
+                                body_edges.setdefault(b.name, []).append((nm, 1))
+            if ins.op == "call":
+                cm = re.search(r"to_apply=%?([\w.\-]+)", ins.line)
+                if cm:
+                    body_edges.setdefault(b.name, []).append((cm.group(1), 1))
+
+    # propagate weights from entry through control-flow edges
+    weights: dict[str, int] = {entry: 1}
+    frontier = [entry]
+    seen_edges = set()
+    while frontier:
+        src = frontier.pop()
+        for dst, trip in body_edges.get(src, []):
+            key = (src, dst)
+            if key in seen_edges:
+                continue
+            seen_edges.add(key)
+            w = weights.get(src, 1) * max(trip, 1)
+            if weights.get(dst, 0) < w:
+                weights[dst] = w
+                frontier.append(dst)
+
+    counted = {n for n in weights if n not in fusion_called}
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll: dict[str, float] = {}
+    unknown_trip_whiles = 0
+    for bname in counted:
+        w = weights.get(bname, 1)
+        for ins in blocks[bname].instrs:
+            if ins.op == "while" and "known_trip_count" not in ins.line:
+                unknown_trip_whiles += 1
+            # ---- memory bytes: result + resolved operand bytes -------------
+            if ins.op in ("parameter", "constant", "get-tuple-element", "tuple",
+                          "bitcast"):
+                continue
+            rb = _shape_bytes(ins.result_txt)
+            ob = 0
+            # operand names: inside the op's parens
+            pm = re.search(re.escape(ins.op) + r"\((.*?)\)(?:,|$)", ins.line)
+            if pm:
+                for opnd in _OPND_RE.findall(pm.group(1)):
+                    ob += _shape_bytes(name2result.get(opnd, ""))
+            if ins.op not in ("while",):  # while results alias its carry
+                hbm_bytes += w * (rb + ob)
+            # ---- dot flops --------------------------------------------------
+            if ins.op == "dot":
+                dims = _shape_dims(ins.result_txt)
+                res_elems = 1
+                for d in (dims[0] if dims else []):
+                    res_elems *= d
+                lm = re.search(r"dot\((.*?)\)(?:,|$)", ins.line)
+                contr = 1
+                if lm:
+                    opnds = _OPND_RE.findall(lm.group(1))
+                    if opnds:
+                        lhs_shape = _shape_dims(name2result.get(opnds[0], ""))
+                        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+                        if lhs_shape and cm and cm.group(1):
+                            for ci in cm.group(1).split(","):
+                                idx = int(ci)
+                                if idx < len(lhs_shape[0]):
+                                    contr *= lhs_shape[0][idx]
+                flops += w * 2.0 * res_elems * contr
+            # ---- collectives ------------------------------------------------
+            base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base in _COLLECTIVES and not ins.op.endswith("-done"):
+                rb_c = _shape_bytes(ins.result_txt)
+                if base == "all-reduce":
+                    traffic = 2 * rb_c
+                elif base == "reduce-scatter":
+                    traffic = ob or rb_c
+                else:
+                    traffic = rb_c
+                coll[base] = coll.get(base, 0.0) + w * traffic
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_bytes": coll,
+        "collective_bytes_total": float(sum(coll.values())),
+        "n_computations_counted": len(counted),
+        "unknown_trip_whiles": unknown_trip_whiles,
+        "weights": {k: v for k, v in sorted(weights.items()) if v > 1},
+    }
+
+
+def top_byte_contributors(hlo: str, top: int = 14) -> list[tuple[str, float, int]]:
+    """(op kind + shape, weighted GB, count) — where the memory term goes."""
+    blocks, entry = parse_blocks(hlo)
+    name2result: dict[str, str] = {}
+    fusion_called: set[str] = set()
+    body_edges: dict[str, list[tuple[str, int]]] = {}
+    for b in blocks.values():
+        for ins in b.instrs:
+            name2result[ins.name] = ins.result_txt
+            if ins.op == "fusion":
+                fm = re.search(r"calls=%?([\w.\-]+)", ins.line)
+                if fm:
+                    fusion_called.add(fm.group(1))
+            if ins.op == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ins.line)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                tm = re.search(r"known_trip_count[^0-9]*(\d+)", ins.line)
+                trip = int(tm.group(1)) if tm else 1
+                if bm:
+                    body_edges.setdefault(b.name, []).append((bm.group(1), trip))
+                if cm:
+                    body_edges.setdefault(b.name, []).append((cm.group(1), trip))
+    weights = {entry: 1}
+    frontier = [entry]
+    seen = set()
+    while frontier:
+        src = frontier.pop()
+        for dst, trip in body_edges.get(src, []):
+            if (src, dst) in seen:
+                continue
+            seen.add((src, dst))
+            w = weights.get(src, 1) * max(trip, 1)
+            if weights.get(dst, 0) < w:
+                weights[dst] = w
+                frontier.append(dst)
+    agg: dict[str, list] = {}
+    for bname in weights:
+        if bname in fusion_called:
+            continue
+        w = weights.get(bname, 1)
+        for ins in blocks[bname].instrs:
+            if ins.op in ("parameter", "constant", "get-tuple-element", "tuple",
+                          "bitcast", "while"):
+                continue
+            rb = _shape_bytes(ins.result_txt)
+            ob = 0
+            pm = re.search(re.escape(ins.op) + r"\((.*?)\)(?:,|$)", ins.line)
+            if pm:
+                for opnd in _OPND_RE.findall(pm.group(1)):
+                    ob += _shape_bytes(name2result.get(opnd, ""))
+            md = re.search(r'op_name="jit\([\w_]+\)/([^"]{0,60})', ins.line)
+            src = (md.group(1).split(" ")[0] if md else "?")
+            key = f"{ins.op:<18} {src}"
+            a = agg.setdefault(key, [0.0, 0])
+            a[0] += w * (rb + ob)
+            a[1] += 1
+    rows = sorted(agg.items(), key=lambda kv: -kv[1][0])[:top]
+    return [(k, v[0] / 1e9, v[1]) for k, v in rows]

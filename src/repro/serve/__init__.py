@@ -1,0 +1,8 @@
+"""Serving layer. The decode/prefill model paths live in
+repro.models.lm.LM.decode_step / cache_template / cache_specs (shared with
+training for one source of truth); the batched driver is
+repro.launch.serve. This package re-exports the public surface."""
+from repro.launch.serve import main as serve_main
+from repro.train.steps import make_prefill_step, make_serve_step
+
+__all__ = ["make_serve_step", "make_prefill_step", "serve_main"]

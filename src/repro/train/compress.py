@@ -1,0 +1,58 @@
+"""Error-feedback int8 gradient compression (DP traffic reduction).
+
+For explicit-DP reductions (e.g. cross-pod DCN all-reduce where 4x fewer
+bytes matter most), gradients are quantized to int8 with a per-tensor scale;
+the quantization residual is fed back into the next step (EF-SGD/1-bit Adam
+style), keeping convergence unbiased in practice.
+
+Usage (see launch/train.py --compress-grads): compress -> (all-reduce int8)
+-> decompress. The roofline collective term scales accordingly.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def compress_leaf(g: jax.Array, residual: jax.Array | None = None):
+    g32 = g.astype(jnp.float32)
+    if residual is not None:
+        g32 = g32 + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    new_residual = g32 - q.astype(jnp.float32) * scale
+    return q, scale, new_residual
+
+
+def decompress_leaf(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_residuals(grads: Pytree) -> Pytree:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_tree(grads: Pytree, residuals: Pytree):
+    out = jax.tree.map(compress_leaf, grads, residuals)
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    qs = jax.tree.unflatten(treedef, [t[0] for t in flat])
+    scales = jax.tree.unflatten(treedef, [t[1] for t in flat])
+    res = jax.tree.unflatten(treedef, [t[2] for t in flat])
+    return qs, scales, res
+
+
+def decompress_tree(qs: Pytree, scales: Pytree, like: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda q, s, g: decompress_leaf(q, s, g.dtype), qs, scales, like
+    )
+
+
+def compressed_bytes(grads: Pytree) -> tuple[int, int]:
+    """(raw bytes, compressed bytes) for the DP reduction."""
+    raw = sum(g.size * g.dtype.itemsize for g in jax.tree.leaves(grads))
+    comp = sum(g.size + 4 for g in jax.tree.leaves(grads))  # int8 + scale
+    return raw, comp

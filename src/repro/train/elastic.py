@@ -1,0 +1,48 @@
+"""Elastic scaling: mesh resize as an ARES reconfiguration.
+
+Scale-up/down procedure (DESIGN.md §6):
+  1. quorum-checkpoint current state to the EC store (cheap: CDC blocks);
+  2. recon the store onto the new host set (ARES recon per block — the
+     service stays readable during the move);
+  3. restore into the new mesh layout (jax.device_put with new shardings).
+
+On this CPU container step 3 reshards within the host meshes; on a real
+cluster the same code runs over jax.distributed with per-host addressable
+shards.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.models.sharding import MeshCtx
+from repro.train.checkpoint import ECCheckpointStore
+
+Pytree = Any
+
+
+def reshard_state(state: Pytree, spec_tree: Pytree) -> Pytree:
+    """Reshard a pytree onto new NamedShardings (elastic mesh change)."""
+    return jax.tree.map(jax.device_put, state, spec_tree)
+
+
+def elastic_resize(
+    store: ECCheckpointStore,
+    state: Pytree,
+    step: int,
+    *,
+    new_hosts: int,
+    new_parity: int | None = None,
+    shard_id: str = "shard0",
+) -> tuple[int, Pytree, int]:
+    """Checkpoint -> recon to the resized host set -> restore.
+
+    Returns (restored step, restored state, blocks moved)."""
+    st = store.save(step, state, shard_id)
+    assert st.success, "elastic resize requires a successful checkpoint"
+    moved = store.reconfigure(shard_id, n_hosts=new_hosts, parity=new_parity)
+    restored = store.restore(shard_id)
+    assert restored is not None
+    rstep, rstate = restored
+    return rstep, rstate, moved

@@ -1,0 +1,119 @@
+"""train_step / prefill_step / serve_step builders + their shardings."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.lm import LM
+from repro.models.registry import input_specs
+from repro.models.sharding import MeshCtx
+from repro.train.optimizer import (
+    AdamWConfig,
+    adamw_init_shapes,
+    adamw_specs,
+    adamw_update,
+    adamw_update_sharded,
+)
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeConfig, ctx: MeshCtx,
+                    model: LM | None = None) -> dict:
+    B = shape.global_batch
+    specs = input_specs(cfg, shape)
+    out = {}
+    bspec = ctx.token_spec(B)  # (batch-ish, seq-ish)
+    pure_dp = (model or LM(cfg)).pure_dp
+    if pure_dp and B % (ctx.n_batch * ctx.n_model) == 0:
+        bspec = ((*ctx.batch_axes, "model"), None)
+    for k, sd in specs.items():
+        if k in ("tokens", "labels"):
+            out[k] = ctx.ns(*bspec)
+        elif k == "embeds":
+            out[k] = ctx.ns(*bspec, None)
+        elif k == "audio_embeds":
+            out[k] = ctx.ns(*bspec, None)
+        elif k == "positions":
+            out[k] = ctx.ns(None, *bspec)
+        elif k in ("token", "embed"):
+            sp = (ctx.batch_axes,) if B % ctx.n_batch == 0 and B >= ctx.n_batch else (None,)
+            out[k] = ctx.ns(*sp, *([None] * (len(sd.shape) - 1)))
+        else:  # cur_len
+            out[k] = ctx.replicated()
+    return out
+
+
+def make_train_step(model: LM, ctx: MeshCtx | None, opt_cfg: AdamWConfig | None = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+    pspecs = zspecs = None
+    if ctx is not None:
+        pspecs = model.param_specs(ctx)
+        zspecs = adamw_specs(pspecs, model.param_shapes(), ctx)["m"]
+
+    def train_step(params, opt_state, batch):
+        if ctx is not None:
+            # params are *stored* ZeRO-sharded (zspecs); gather to compute
+            # layout once per step (single clean bf16 all-gather per tensor).
+            params_c = jax.tree.map(jax.lax.with_sharding_constraint, params, pspecs)
+        else:
+            params_c = params
+        loss, grads = jax.value_and_grad(lambda p: model.loss_fn(p, batch, ctx))(params_c)
+        params, opt_state = adamw_update(
+            params, grads, opt_state, opt_cfg, param_specs=pspecs, zero_specs=zspecs
+        )
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(model: LM, ctx: MeshCtx):
+    def prefill_step(params, batch):
+        """Forward only; returns last-position logits (B, V)."""
+        cfg = model.cfg
+        if cfg.family == "encdec":
+            h, _ = model._run_encdec(params, batch, ctx)
+        else:
+            if cfg.embeddings_input:
+                h = batch["embeds"].astype(jnp.bfloat16)
+                positions = batch["positions"]
+            else:
+                tokens = batch["tokens"]
+                h = params["embed"][tokens].astype(jnp.bfloat16)
+                B, S = tokens.shape
+                positions = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+                if cfg.rope_style == "mrope":
+                    positions = jnp.stack([positions] * 3, axis=0)
+            h = ctx.constrain(h, *model._tok_spec(ctx))
+            if cfg.family == "ssm":
+                h, _ = model._run_ssm_stack(params, h, ctx)
+            elif cfg.family == "hybrid":
+                h, _ = model._run_hybrid_stack(params, h, positions=positions, ctx=ctx)
+            else:
+                h, _ = model._run_decoder_stack(params, h, positions=positions, ctx=ctx)
+        logits = model._head(params, h[:, -1:, :])[:, 0]
+        return logits.astype(jnp.float32)
+
+    return prefill_step
+
+
+def make_serve_step(model: LM, ctx: MeshCtx):
+    def serve_step(params, cache, batch):
+        return model.decode_step(params, cache, batch, ctx)
+
+    return serve_step
+
+
+def training_state_shapes(model: LM):
+    ps = model.param_shapes()
+    return ps, adamw_init_shapes(ps)
+
+
+def training_state_specs(model: LM, ctx: MeshCtx):
+    """(param *storage* specs, optimizer specs). Params are stored in the
+    ZeRO (data-sharded) layout between steps; train_step gathers them to the
+    compute layout once per step (see make_train_step)."""
+    pspecs = model.param_specs(ctx)
+    ospecs = adamw_specs(pspecs, model.param_shapes(), ctx)
+    return ospecs["m"], ospecs

@@ -1,0 +1,109 @@
+"""History checkers: atomicity (linearizability via tags), coverability
+(Definitions 3/4), and fragmented-object connectivity (Lemma 13).
+
+Because tags totally order writes, linearizability of a tagged R/W register
+reduces to real-time tag monotonicity — checkable in O(n log n) over the
+recorded virtual-time history (this is why we simulate: a live testbed can't
+get these guarantees checked deterministically).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+from repro.core.tags import TAG0, OpRecord
+
+
+def check_atomicity(history: list[OpRecord]) -> None:
+    """Per object: (1) ops that finish before another starts never observe a
+    *smaller* tag later (C1 at the op level); (2) every read's tag was
+    produced by some chg-write or is t0 (C2); (3) chg-write tags are unique."""
+    by_obj: dict[str, list[OpRecord]] = defaultdict(list)
+    for r in history:
+        if r.kind in ("read", "write") and r.tag is not None:
+            by_obj[r.obj].append(r)
+    for obj, ops in by_obj.items():
+        ops.sort(key=lambda r: r.start)
+        # (3) chg-write tag uniqueness (Lemma 6)
+        wtags = [r.tag for r in ops if r.kind == "write" and r.flag == "chg"]
+        assert len(wtags) == len(set(wtags)), f"{obj}: duplicate write tags"
+        # (1) real-time tag monotonicity
+        max_completed_tag = TAG0
+        events = sorted(
+            [(r.start, 1, r) for r in ops] + [(r.end, 0, r) for r in ops],
+            key=lambda e: (e[0], e[1]),
+        )
+        for _t, is_start, r in events:
+            if is_start:
+                r.extra["_tag_floor"] = max_completed_tag
+            else:
+                floor = r.extra.get("_tag_floor", TAG0)
+                assert r.tag >= floor, (
+                    f"{obj}: op {r.kind}@{r.client} returned tag {r.tag} < "
+                    f"floor {floor} (violates real-time order)"
+                )
+                if r.tag > max_completed_tag:
+                    max_completed_tag = r.tag
+        # (2) reads return written tags
+        produced = set(wtags) | {TAG0}
+        for r in ops:
+            if r.kind == "read":
+                assert r.tag in produced or any(
+                    w.tag == r.tag for w in ops if w.kind == "write"
+                ), f"{obj}: read returned unwritten tag {r.tag}"
+
+
+def check_coverability(history: list[OpRecord]) -> None:
+    """Validity + consolidation/continuity/evolution over chg-writes."""
+    by_obj: dict[str, list[OpRecord]] = defaultdict(list)
+    for r in history:
+        if r.kind == "write":
+            by_obj[r.obj].append(r)
+    for obj, ops in by_obj.items():
+        chg = sorted([r for r in ops if r.flag == "chg"], key=lambda r: r.tag)
+        # validity: versions strictly grow along the chain & are unique
+        tags = [r.tag for r in chg]
+        assert tags == sorted(set(tags)), f"{obj}: versions not strictly ordered"
+        # consolidation: real-time precedence implies version order
+        for a in chg:
+            for b in chg:
+                if a.end < b.start:
+                    assert a.tag < b.tag, (
+                        f"{obj}: consolidation violated {a.tag} !< {b.tag}"
+                    )
+        # continuity/evolution: timestamps increase by exactly 1 along the
+        # winning chain (our tags are (ts, wid) with ts+1 per chg write)
+        ts_list = sorted({t[0] for t in tags})
+        assert ts_list == list(range(ts_list[0], ts_list[0] + len(ts_list))) if ts_list else True, (
+            f"{obj}: version timestamps have gaps: {ts_list}"
+        )
+
+
+def check_unchg_is_read(history: list[OpRecord]) -> None:
+    """A write that reports unchg must return a tag some chg write produced
+    (the write became a read — §II fragmented coverability)."""
+    by_obj: dict[str, list[OpRecord]] = defaultdict(list)
+    for r in history:
+        if r.kind == "write":
+            by_obj[r.obj].append(r)
+    for obj, ops in by_obj.items():
+        produced = {r.tag for r in ops if r.flag == "chg"} | {TAG0}
+        for r in ops:
+            if r.flag == "unchg":
+                assert r.tag in produced, (
+                    f"{obj}: unchg write returned unknown tag {r.tag}"
+                )
+
+
+def check_connected_reads(history: list[OpRecord]) -> None:
+    """fm-read must always assemble a connected chain: recorded as n_blocks
+    >= 0 and no read aborted mid-chain (FM records only complete walks)."""
+    for r in history:
+        if r.kind == "fm-read":
+            assert "n_blocks" in r.extra
+
+
+def check_all(history: list[OpRecord]) -> None:
+    check_atomicity(history)
+    check_coverability(history)
+    check_unchg_is_read(history)
+    check_connected_reads(history)

@@ -1,0 +1,108 @@
+"""Property-based validation of DAP Property 1 (C1/C2) under random
+concurrent schedules — the safety contract every ARES variant depends on."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from checkers import check_atomicity, check_coverability
+from repro.core import DSS, DSSParams
+from repro.core.dap.base import make_dap
+from repro.core.server import StorageServer
+from repro.core.tags import Config
+from repro.net.sim import Network
+
+
+def _net(n, seed, dap, k):
+    net = Network(seed=seed)
+    sids = tuple(f"s{i}" for i in range(n))
+    for s in sids:
+        net.add_server(StorageServer(s))
+    cfg = Config("c0", sids, dap=dap, k=k, delta=8)
+    return net, cfg
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**16), st.sampled_from(["abd", "ec", "ec_opt"]))
+def test_c1_put_then_get_sees_tag(seed, dap):
+    """C1: a get-data after a completed put-data returns tag >= put tag."""
+    net, cfg = _net(5, seed, dap, k=3 if dap != "abd" else 1)
+    state = {}
+    w = make_dap(net, "w", cfg, 0, state)
+    rng = np.random.default_rng(seed)
+    tag = (0, "")
+    for i in range(4):
+        tag = (tag[0] + 1, "w")
+        val = rng.integers(0, 256, rng.integers(1, 200), dtype=np.uint8).tobytes()
+        net.run_op(w.put_data("obj", tag, val), client="w")
+        r = make_dap(net, f"r{i}", cfg, 0, {})
+        got_tag, got_val = net.run_op(r.get_data("obj"), client=f"r{i}")
+        assert got_tag >= tag
+        if got_tag == tag:
+            assert got_val == val  # C2: value was actually written
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**16), st.sampled_from(["ec", "ec_opt"]))
+def test_c1_under_concurrent_puts(seed, dap):
+    """Concurrent put-data racers: any subsequent get-data returns a tag at
+    least as large as every COMPLETED put (C1), and a written value (C2)."""
+    net, cfg = _net(6, seed, dap, k=4)
+    rng = np.random.default_rng(seed)
+    values = {}
+    futs = []
+    for i in range(4):
+        st_ = {}
+        w = make_dap(net, f"w{i}", cfg, 0, st_)
+        tag = (i + 1, f"w{i}")
+        val = rng.integers(0, 256, 64, dtype=np.uint8).tobytes()
+        values[tag] = val
+        futs.append(net.spawn(w.put_data("obj", tag, val), client=f"w{i}",
+                              delay=float(rng.uniform(0, 1e-3))))
+    net.run()
+    assert all(f.done for f in futs)
+    r = make_dap(net, "r", cfg, 0, {})
+    got_tag, got_val = net.run_op(r.get_data("obj"), client="r")
+    assert got_tag >= max(values)        # all puts completed before the read
+    assert got_val == values[got_tag]    # C2
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**16),
+       st.sampled_from(["coabd", "coaresabd", "coaresec", "coaresecf"]),
+       st.lists(st.tuples(st.integers(0, 2), st.integers(0, 3)), min_size=3,
+                max_size=10))
+def test_random_schedules_atomic_and_coverable(seed, alg, script):
+    """Random interleavings of reads/writes from 3 clients: the recorded
+    history must satisfy atomicity + coverability (checkers)."""
+    dss = DSS(DSSParams(algorithm=alg, n_servers=5, parity_m=1, seed=seed,
+                        min_block=64, avg_block=128, max_block=512))
+    clients = [dss.client(f"c{i}") for i in range(3)]
+    rng = np.random.default_rng(seed)
+    # WELL-FORMEDNESS (§II): each client runs ONE op at a time — chain each
+    # client's ops into a single sequential generator; clients race each
+    # other, never themselves (Lemma 6 case (a) depends on this).
+    per_client: dict[int, list] = {0: [], 1: [], 2: []}
+    for ci, kind in script:
+        per_client[ci].append(kind)
+
+    from repro.net.sim import Sleep
+
+    def client_loop(ci, kinds):
+        c = clients[ci]
+        for kind in kinds:
+            yield Sleep(float(rng.uniform(0, 5e-3)))
+            if kind == 0:
+                yield from c.read("f")
+            else:
+                blob = rng.integers(0, 256, 64 * kind, dtype=np.uint8).tobytes()
+                yield from c.read("f")
+                yield from c.update("f", blob)
+        return True
+
+    futs = [dss.net.spawn(client_loop(ci, kinds), client=f"c{ci}")
+            for ci, kinds in per_client.items() if kinds]
+    dss.net.run()
+    assert all(f.done for f in futs)
+    check_atomicity(dss.history)
+    check_coverability(dss.history)

@@ -1,0 +1,176 @@
+"""GF(256) field + RS code correctness (unit + hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.erasure import (
+    RSCode,
+    bytes_to_rows,
+    cauchy_parity_matrix,
+    gf_inv,
+    gf_invert_matrix,
+    gf_matmul_np,
+    gf_mul,
+    gf_mul_np,
+    rows_to_bytes,
+    vandermonde_matrix,
+)
+from repro.erasure.gf import (
+    bits_to_bytes_np,
+    bytes_to_bits_np,
+    gf_const_to_bitmatrix,
+    gf_matrix_to_bitmatrix,
+)
+
+els = st.integers(min_value=0, max_value=255)
+nz_els = st.integers(min_value=1, max_value=255)
+
+
+# ---------------------------------------------------------------- field axioms
+@given(els, els, els)
+def test_gf_mul_associative(a, b, c):
+    assert gf_mul(gf_mul(a, b), c) == gf_mul(a, gf_mul(b, c))
+
+
+@given(els, els)
+def test_gf_mul_commutative(a, b):
+    assert gf_mul(a, b) == gf_mul(b, a)
+
+
+@given(els, els, els)
+def test_gf_distributive(a, b, c):
+    assert gf_mul(a, b ^ c) == gf_mul(a, b) ^ gf_mul(a, c)
+
+
+@given(nz_els)
+def test_gf_inverse(a):
+    assert gf_mul(a, gf_inv(a)) == 1
+
+
+@given(els)
+def test_gf_identity_and_zero(a):
+    assert gf_mul(a, 1) == a
+    assert gf_mul(a, 0) == 0
+
+
+# ------------------------------------------------------------- bitslice algebra
+@given(els, els)
+def test_bitmatrix_multiplication(c, d):
+    """bits(c*d) == M_c @ bits(d) mod 2 — the core bitslicing identity."""
+    M = gf_const_to_bitmatrix(c)
+    dbits = np.array([(d >> j) & 1 for j in range(8)], dtype=np.uint8)
+    pbits = (M @ dbits) % 2
+    p = sum(int(pbits[i]) << i for i in range(8))
+    assert p == gf_mul(c, d)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 8), st.integers(2, 8), st.integers(1, 64), st.integers(0, 2**32 - 1))
+def test_bitsliced_matmul_matches_lut(m, k, L, seed):
+    rng = np.random.default_rng(seed)
+    A = rng.integers(0, 256, (m, k), dtype=np.uint8)
+    B = rng.integers(0, 256, (k, L), dtype=np.uint8)
+    want = gf_matmul_np(A, B)
+    Abits = gf_matrix_to_bitmatrix(A).astype(np.int64)
+    Bbits = bytes_to_bits_np(B).astype(np.int64)
+    got = bits_to_bytes_np(((Abits @ Bbits) % 2).astype(np.uint8))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------- matrix layer
+def test_gf_matrix_inverse_roundtrip():
+    rng = np.random.default_rng(0)
+    for k in (1, 2, 5, 10):
+        # Cauchy-derived square matrices are always invertible
+        A = cauchy_parity_matrix(2 * k, k)[:k]
+        Ainv = gf_invert_matrix(A)
+        np.testing.assert_array_equal(gf_matmul_np(A, Ainv), np.eye(k, dtype=np.uint8))
+
+
+def test_singular_matrix_raises():
+    A = np.zeros((3, 3), dtype=np.uint8)
+    with pytest.raises(np.linalg.LinAlgError):
+        gf_invert_matrix(A)
+
+
+def test_vandermonde_systematic_mds_small():
+    # every k-subset of generator rows of [I; P] must be invertible
+    import itertools
+
+    n, k = 7, 4
+    P = vandermonde_matrix(n, k)
+    G = np.concatenate([np.eye(k, dtype=np.uint8), P], axis=0)
+    for rows in itertools.combinations(range(n), k):
+        gf_invert_matrix(G[list(rows)])  # must not raise
+
+
+def test_cauchy_mds_small():
+    import itertools
+
+    n, k = 8, 5
+    P = cauchy_parity_matrix(n, k)
+    G = np.concatenate([np.eye(k, dtype=np.uint8), P], axis=0)
+    for rows in itertools.combinations(range(n), k):
+        gf_invert_matrix(G[list(rows)])
+
+
+# ------------------------------------------------------------------- RS codes
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(2, 10),      # k
+    st.integers(0, 6),       # m
+    st.integers(1, 200),     # L
+    st.integers(0, 2**32 - 1),
+)
+def test_rs_roundtrip_random_erasures(k, m, L, seed):
+    n = k + m
+    rng = np.random.default_rng(seed)
+    code = RSCode(n=n, k=k)
+    data = rng.integers(0, 256, (k, L), dtype=np.uint8)
+    coded = code.encode(data)
+    assert coded.shape == (n, L)
+    np.testing.assert_array_equal(coded[:k], data)  # systematic
+    keep = rng.permutation(n)[:k]
+    got = code.decode(coded[keep], list(keep))
+    np.testing.assert_array_equal(got, data)
+
+
+def test_rs_decode_insufficient_fragments():
+    code = RSCode(n=6, k=4)
+    data = np.arange(4 * 8, dtype=np.uint8).reshape(4, 8)
+    coded = code.encode(data)
+    with pytest.raises(ValueError):
+        code.decode(coded[:3], [0, 1, 2])
+
+
+def test_rs_reconstruct_single_fragment():
+    rng = np.random.default_rng(7)
+    code = RSCode(n=8, k=5)
+    data = rng.integers(0, 256, (5, 33), dtype=np.uint8)
+    coded = code.encode(data)
+    for lost in range(8):
+        keep = [i for i in range(8) if i != lost][:5]
+        rebuilt = code.reconstruct_fragment(lost, coded[keep], keep)
+        np.testing.assert_array_equal(rebuilt, coded[lost])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.binary(min_size=0, max_size=4096), st.integers(2, 9), st.integers(1, 4))
+def test_rs_bytes_roundtrip(blob, k, m):
+    code = RSCode(n=k + m, k=k)
+    frags, orig = code.encode_bytes(blob)
+    assert len(frags) == k + m
+    # drop the m largest-index fragments, decode from an arbitrary k-subset
+    rng = np.random.default_rng(len(blob))
+    keep = sorted(rng.permutation(k + m)[:k].tolist())
+    got = code.decode_bytes({i: frags[i] for i in keep}, orig)
+    assert got == blob
+
+
+def test_bytes_rows_padding():
+    rows, orig = bytes_to_rows(b"hello world", 4)
+    assert rows.shape[0] == 4 and orig == 11
+    assert rows_to_bytes(rows, orig) == b"hello world"
+    rows0, o0 = bytes_to_rows(b"", 3)
+    assert rows0.shape == (3, 1) and rows_to_bytes(rows0, o0) == b""

@@ -1,0 +1,246 @@
+"""CoARESF / fragmented-object behaviour (§V): BI, connectivity, concurrency."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from checkers import check_all
+from repro.core import DSS, DSSParams
+
+FRAG_ALGS = ["coabdf", "coaresabdf", "coaresecf", "coaresecf-noopt"]
+
+
+def _dss(alg, n=5, seed=0, **kw):
+    kw.setdefault("min_block", 64)
+    kw.setdefault("avg_block", 128)
+    kw.setdefault("max_block", 512)
+    return DSS(DSSParams(algorithm=alg, n_servers=n, seed=seed, **kw))
+
+
+def _blob(seed, size):
+    return np.random.default_rng(seed).integers(0, 256, size, dtype=np.uint8).tobytes()
+
+
+# ------------------------------------------------------------------ basics
+@pytest.mark.parametrize("alg", FRAG_ALGS)
+def test_roundtrip(alg):
+    dss = _dss(alg)
+    w, r = dss.client("w"), dss.client("r")
+    blob = _blob(0, 4000)
+    stats = dss.net.run_op(w.update("f", blob), client="w")
+    assert stats["success"] and stats["blocks"] > 1
+    assert dss.net.run_op(r.read("f"), client="r") == blob
+    check_all(dss.history)
+
+
+@pytest.mark.parametrize("alg", FRAG_ALGS)
+def test_incremental_update_touches_few_blocks(alg):
+    """The FM's raison d'être: a local edit rewrites O(1) blocks, not O(n)."""
+    dss = _dss(alg)
+    w = dss.client("w")
+    blob = bytearray(_blob(1, 16_000))
+    s0 = dss.net.run_op(w.update("f", bytes(blob)), client="w")
+    n_blocks = s0["blocks"]
+    assert n_blocks >= 8
+    blob[5000] ^= 0xAA  # single-byte edit
+    s1 = dss.net.run_op(w.update("f", bytes(blob)), client="w")
+    assert s1["success"]
+    assert s1["written"] <= 4, f"local edit rewrote {s1['written']} blocks"
+    r = dss.client("r")
+    assert dss.net.run_op(r.read("f"), client="r") == bytes(blob)
+
+
+@pytest.mark.parametrize("alg", ["coaresecf"])
+def test_append_grow_shrink(alg):
+    dss = _dss(alg)
+    w, r = dss.client("w"), dss.client("r")
+    a = _blob(2, 3000)
+    b = a + _blob(3, 2000)          # append
+    c = b[:1500]                     # shrink
+    for blob in (a, b, c):
+        stats = dss.net.run_op(w.update("f", blob), client="w")
+        assert stats["success"]
+        assert dss.net.run_op(r.read("f"), client="r") == blob
+    check_all(dss.history)
+
+
+@pytest.mark.parametrize("alg", ["coaresecf", "coaresabdf"])
+def test_insert_in_middle(alg):
+    dss = _dss(alg)
+    w, r = dss.client("w"), dss.client("r")
+    blob = _blob(4, 8000)
+    dss.net.run_op(w.update("f", blob), client="w")
+    edited = blob[:4000] + _blob(5, 600) + blob[4000:]
+    stats = dss.net.run_op(w.update("f", edited), client="w")
+    assert stats["success"] and stats["created"] >= 1
+    assert dss.net.run_op(r.read("f"), client="r") == edited
+    check_all(dss.history)
+
+
+# ---------------------------------------------------- concurrency semantics
+def test_concurrent_writers_different_regions_both_prevail():
+    """Fragmented coverability: concurrent updates on *different* blocks all
+    succeed — the paper's headline concurrency win (§II, §V)."""
+    dss = _dss("coaresecf", n=5, seed=13, min_block=64, avg_block=128, max_block=256)
+    w1, w2 = dss.client("w1"), dss.client("w2")
+    blob = _blob(6, 8000)
+    dss.net.run_op(w1.update("f", blob), client="w1")
+    dss.net.run_op(w2.read("f"), client="w2")  # w2 learns current versions
+    # edit disjoint, far-apart regions
+    e1 = bytearray(blob); e1[100] ^= 0xFF
+    e2 = bytearray(blob); e2[7800] ^= 0xFF
+    f1 = dss.net.spawn(w1.update("f", bytes(e1)), client="w1")
+    f2 = dss.net.spawn(w2.update("f", bytes(e2)), client="w2")
+    dss.net.run()
+    assert f1.done and f2.done
+    assert f1.result["success"] and f2.result["success"], (
+        f1.result, f2.result,
+    )
+    r = dss.client("r")
+    got = dss.net.run_op(r.read("f"), client="r")
+    want = bytearray(blob); want[100] ^= 0xFF; want[7800] ^= 0xFF
+    assert got == bytes(want), "both disjoint edits must survive"
+    check_all(dss.history)
+
+
+def test_concurrent_writers_same_block_one_prevails():
+    dss = _dss("coaresecf", n=5, seed=17)
+    w1, w2 = dss.client("w1"), dss.client("w2")
+    blob = _blob(7, 2000)
+    dss.net.run_op(w1.update("f", blob), client="w1")
+    dss.net.run_op(w2.read("f"), client="w2")
+    e1 = bytearray(blob); e1[500] ^= 0x01
+    e2 = bytearray(blob); e2[500] ^= 0x02   # same block
+    f1 = dss.net.spawn(w1.update("f", bytes(e1)), client="w1")
+    f2 = dss.net.spawn(w2.update("f", bytes(e2)), client="w2")
+    dss.net.run()
+    r = dss.client("r")
+    got = dss.net.run_op(r.read("f"), client="r")
+    assert got in (bytes(e1), bytes(e2))  # no Frankenstein value on one block
+    check_all(dss.history)
+
+
+def test_reader_sees_connected_chain_during_update():
+    """Lemma 13 / Thm 14: reads concurrent with updates never observe a
+    broken list — every read assembles a coherent file."""
+    dss = _dss("coaresecf", n=5, seed=23)
+    w, r = dss.client("w"), dss.client("r")
+    blob = _blob(8, 12_000)
+    dss.net.run_op(w.update("f", blob), client="w")
+    edited = blob[:2000] + _blob(9, 3000) + blob[6000:]
+    fw = dss.net.spawn(w.update("f", edited), client="w")
+    reads = [
+        dss.net.spawn(r.read("f"), client="r", delay=0.002 * i) for i in range(6)
+    ]
+    dss.net.run()
+    assert fw.done and all(f.done for f in reads)
+    for f in reads:
+        got = f.result
+        # every concurrent read returns a *prefix-consistent* mix: all-old,
+        # all-new, or a connected combination — never a torn/dangling chain
+        assert isinstance(got, bytes) and len(got) > 0
+    final = dss.net.run_op(r.read("f"), client="r")
+    assert final == edited
+    check_all(dss.history)
+
+
+# ----------------------------------------------------------- recon on files
+def test_fm_reconfig_walks_all_blocks():
+    dss = _dss("coaresecf", n=5, seed=29)
+    w, g, r = dss.client("w"), dss.client("g"), dss.client("r")
+    blob = _blob(10, 6000)
+    stats = dss.net.run_op(w.update("f", blob), client="w")
+    cfg = dss.make_config(dap="abd")
+    nblocks = dss.net.run_op(g.recon("f", cfg), client="g")
+    assert nblocks == stats["blocks"] + 1  # every data block + genesis
+    assert dss.net.run_op(r.read("f"), client="r") == blob
+    check_all(dss.history)
+
+
+def test_fm_reconfig_to_fresh_servers_preserves_file():
+    dss = _dss("coaresecf", n=5, seed=31)
+    w, g, r = dss.client("w"), dss.client("g"), dss.client("r")
+    blob = _blob(11, 5000)
+    dss.net.run_op(w.update("f", blob), client="w")
+    cfg = dss.make_config(fresh_servers=True)
+    dss.net.run_op(g.recon("f", cfg), client="g")
+    dss.crash_servers(["s0", "s1"])  # minority of old: traversal still live
+    assert dss.net.run_op(r.read("f"), client="r") == blob
+    dss.crash_servers([f"s{i}" for i in range(5)])
+    assert dss.net.run_op(r.read("f"), client="r") == blob
+    check_all(dss.history)
+
+
+def test_update_concurrent_with_fm_reconfig():
+    dss = _dss("coaresecf", n=5, seed=37)
+    w, g, r = dss.client("w"), dss.client("g"), dss.client("r")
+    blob = _blob(12, 6000)
+    dss.net.run_op(w.update("f", blob), client="w")
+    edited = bytearray(blob); edited[3000] ^= 0x55
+    cfg = dss.make_config(dap="abd", n_servers=7)
+    fg = dss.net.spawn(g.recon("f", cfg), client="g")
+    fw = dss.net.spawn(w.update("f", bytes(edited)), client="w", delay=0.003)
+    dss.net.run()
+    assert fg.done and fw.done
+    got = dss.net.run_op(r.read("f"), client="r")
+    assert got == (bytes(edited) if fw.result["success"] else blob)
+    check_all(dss.history)
+
+
+# --------------------------------------------------------- property-based
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.binary(min_size=0, max_size=3000), min_size=1, max_size=4),
+       st.integers(0, 2**16))
+def test_sequential_update_read_any_contents(contents, seed):
+    dss = _dss("coaresecf", n=5, seed=seed)
+    w, r = dss.client("w"), dss.client("r")
+    for blob in contents:
+        stats = dss.net.run_op(w.update("f", blob), client="w")
+        assert stats["success"]
+        assert dss.net.run_op(r.read("f"), client="r") == blob
+    check_all(dss.history)
+
+
+# ----------------------------------------------- beyond-paper: indexed FM
+@pytest.mark.parametrize("alg", ["coaresecf", "coaresabdf"])
+def test_indexed_mode_roundtrip_and_speedup(alg):
+    """Indexed genesis (parallel block I/O) returns identical content and is
+    strictly faster in virtual time than the linked-list walk."""
+    blob = _blob(50, 24_000)
+    times = {}
+    for indexed in (False, True):
+        dss = DSS(DSSParams(algorithm=alg, n_servers=6, parity_m=2, seed=41,
+                            min_block=64, avg_block=128, max_block=512,
+                            indexed=indexed))
+        w, r = dss.client("w"), dss.client("r")
+        stats = dss.net.run_op(w.update("f", blob), client="w")
+        assert stats["success"]
+        t0 = dss.net.now
+        got = dss.net.run_op(r.read("f"), client="r")
+        times[indexed] = dss.net.now - t0
+        assert got == blob
+        # incremental edit works in both modes
+        e = bytearray(blob); e[12_000] ^= 0xFF
+        s2 = dss.net.run_op(w.update("f", bytes(e)), client="w")
+        assert s2["success"] and s2["written"] <= 6
+        assert dss.net.run_op(r.read("f"), client="r") == bytes(e)
+    assert times[True] < times[False] / 3, times
+
+
+def test_indexed_concurrent_writers_disjoint_edits():
+    dss = DSS(DSSParams(algorithm="coaresecf", n_servers=6, parity_m=2,
+                        seed=43, min_block=64, avg_block=128, max_block=512,
+                        indexed=True))
+    w1, w2 = dss.client("w1"), dss.client("w2")
+    blob = _blob(51, 8000)
+    dss.net.run_op(w1.update("f", blob), client="w1")
+    dss.net.run_op(w2.read("f"), client="w2")
+    e1 = bytearray(blob); e1[100] ^= 0xFF
+    e2 = bytearray(blob); e2[7900] ^= 0xFF
+    f1 = dss.net.spawn(w1.update("f", bytes(e1)), client="w1")
+    f2 = dss.net.spawn(w2.update("f", bytes(e2)), client="w2")
+    dss.net.run()
+    assert f1.result["success"] and f2.result["success"]
+    got = dss.net.run_op(dss.client("r").read("f"), client="r")
+    want = bytearray(blob); want[100] ^= 0xFF; want[7900] ^= 0xFF
+    assert got == bytes(want)

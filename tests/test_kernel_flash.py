@@ -1,0 +1,55 @@
+"""Flash attention Pallas kernel vs oracle: shape/dtype/mask sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+CASES = [
+    # (B, H, Sq, Sk, hd, causal, window, dtype)
+    (1, 2, 128, 128, 32, True, 0, jnp.float32),
+    (2, 4, 256, 256, 64, True, 0, jnp.float32),
+    (1, 2, 256, 256, 64, False, 0, jnp.float32),
+    (1, 2, 256, 256, 64, True, 64, jnp.float32),   # sliding window
+    (2, 2, 512, 512, 128, True, 0, jnp.bfloat16),
+    (1, 1, 128, 512, 64, True, 0, jnp.float32),    # decode-ish Sq < Sk
+]
+
+
+@pytest.mark.parametrize("B,H,Sq,Sk,hd,causal,window,dtype", CASES)
+def test_flash_matches_ref(B, H, Sq, Sk, hd, causal, window, dtype):
+    rng = np.random.default_rng(Sq + Sk + hd)
+    q = jnp.asarray(rng.standard_normal((B, H, Sq, hd)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, H, Sk, hd)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, H, Sk, hd)), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=64, bk=64, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_block_size_invariance():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    a = flash_attention(q, k, v, bq=32, bk=32, interpret=True)
+    b = flash_attention(q, k, v, bq=128, bk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_online_softmax_extreme_values():
+    """Online rescaling must not overflow with large logits."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 1, 64, 32)) * 30, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 64, 32)) * 30, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 1, 64, 32)), jnp.float32)
+    got = flash_attention(q, k, v, bq=32, bk=32, interpret=True)
+    want = flash_attention_ref(q, k, v)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

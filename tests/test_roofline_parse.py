@@ -1,0 +1,80 @@
+"""Unit tests for the scan-weighted HLO analyzer (roofline/hlo_parse.py)."""
+import numpy as np
+
+from repro.roofline.analysis import roofline_report, V5E
+from repro.roofline.hlo_parse import _shape_bytes, analyze, parse_blocks
+
+HLO = """\
+HloModule test
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups={}, to_apply=%add
+  ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (in: f32[8,16]) -> f32[8,16] {
+  %in = f32[8,16]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %init = (s32[], f32[8,16]{1,0}) tuple(%c0, %in)
+  %wh = (s32[], f32[8,16]{1,0}) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  %g = f32[8,16]{1,0} get-tuple-element(%wh), index=1
+  %ag = f32[16,16]{1,0} all-gather(%g), dimensions={0}
+  %dot.2 = f32[8,16]{1,0} dot(%g, %ag), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %out = f32[8,16]{1,0} bitcast(%dot.2)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert _shape_bytes("bf16[4,4]") == 32
+    assert _shape_bytes("(s32[2], f32[3])") == 8 + 12
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_parse_blocks_finds_computations():
+    blocks, entry = parse_blocks(HLO)
+    assert entry == "main"
+    assert "body" in blocks and "cond" in blocks
+    assert any(i.op == "while" for i in blocks["main"].instrs)
+
+
+def test_scan_weighted_flops_and_collectives():
+    r = analyze(HLO)
+    # dot.1 inside the trip-12 while: 2*8*16*16 flops * 12; dot.2 once.
+    per_dot = 2 * 8 * 16 * 16
+    assert r["flops"] == per_dot * 12 + per_dot
+    # all-reduce inside loop: 2x result bytes x 12; all-gather once: result
+    ar = 2 * (8 * 16 * 4) * 12
+    ag = 16 * 16 * 4
+    assert r["collective_bytes"]["all-reduce"] == ar
+    assert r["collective_bytes"]["all-gather"] == ag
+    assert r["unknown_trip_whiles"] == 0
+
+
+def test_roofline_report_terms_and_dominance():
+    rep = roofline_report(
+        flops=197e12, bytes_accessed=819e9 * 2, collective_bytes=50e9,
+        n_chips=256, model_flops=197e12 * 256 * 0.5,
+    )
+    assert abs(rep["compute"] - 1.0) < 1e-6
+    assert abs(rep["memory"] - 2.0) < 1e-6
+    assert rep["dominant"] == "memory"
+    assert abs(rep["mfu_upper_bound"] - 0.25) < 1e-6
+    assert abs(rep["model_flops_ratio"] - 0.5) < 1e-6

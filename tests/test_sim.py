@@ -1,0 +1,139 @@
+"""Network simulator behaviour tests."""
+import numpy as np
+import pytest
+
+from repro.net.sim import RPC, LatencyModel, Network, Server, Sleep, nbytes
+
+
+class Echo(Server):
+    def __init__(self, sid):
+        super().__init__(sid)
+        self.count = 0
+
+    def handle(self, sender, msg):
+        self.count += 1
+        return ("echo", self.sid, msg)
+
+
+def _mknet(n=5, seed=0, **lat):
+    net = Network(seed=seed, latency=LatencyModel(**lat))
+    for i in range(n):
+        net.add_server(Echo(f"s{i}"))
+    return net
+
+
+def test_quorum_rpc_resumes_at_need():
+    net = _mknet(5)
+
+    def op():
+        replies = yield RPC(dests=tuple(net.servers), msg=("ping",), need=3)
+        return replies
+
+    replies = net.run_op(op())
+    assert len(replies) == 3
+
+
+def test_crashed_servers_do_not_reply():
+    net = _mknet(5)
+    net.crash("s0")
+    net.crash("s1")
+
+    def op():
+        replies = yield RPC(dests=tuple(net.servers), msg=("ping",), need=3)
+        return sorted(replies)
+
+    assert net.run_op(op()) == ["s2", "s3", "s4"]
+
+
+def test_op_blocks_without_quorum():
+    net = _mknet(3)
+    net.crash("s0")
+    net.crash("s1")
+
+    def op():
+        yield RPC(dests=tuple(net.servers), msg=("ping",), need=2)
+        return "done"
+
+    fut = net.spawn(op())
+    net.run()
+    assert not fut.done  # liveness requires a quorum
+
+
+def test_latency_depends_on_size():
+    lat = LatencyModel(base_lo=1e-3, base_hi=1e-3, bandwidth=1e6)
+
+    def run_one(payload):
+        net = Network(seed=1, latency=lat)
+        for i in range(3):
+            net.add_server(Echo(f"s{i}"))
+
+        def op():
+            yield RPC(dests=tuple(net.servers), msg=payload, need=3)
+            return net.now
+
+        return net.run_op(op())
+
+    t_small = run_one(b"x")
+    t_big = run_one(b"x" * 1_000_000)
+    assert t_big > t_small + 0.5  # 1 MB at 1 MB/s adds ~1s each way
+
+
+def test_determinism_same_seed():
+    def run(seed):
+        net = _mknet(5, seed=seed)
+
+        def op():
+            yield RPC(dests=tuple(net.servers), msg=("a",), need=4)
+            yield Sleep(0.01)
+            replies = yield RPC(dests=tuple(net.servers), msg=("b",), need=2)
+            return (net.now, sorted(replies))
+
+        return net.run_op(op())
+
+    assert run(42) == run(42)
+    assert run(42) != run(43)
+
+
+def test_nested_generators_compose():
+    net = _mknet(4)
+
+    def inner():
+        r = yield RPC(dests=("s0", "s1"), msg=("inner",), need=2)
+        return len(r)
+
+    def outer():
+        a = yield from inner()
+        b = yield from inner()
+        return a + b
+
+    assert net.run_op(outer()) == 4
+
+
+def test_late_replies_ignored():
+    net = _mknet(5)
+
+    def op():
+        r1 = yield RPC(dests=tuple(net.servers), msg=("x",), need=1)
+        r2 = yield RPC(dests=tuple(net.servers), msg=("y",), need=5)
+        return (len(r1), len(r2))
+
+    assert net.run_op(op()) == (1, 5)
+    # every server handled both rounds despite the early resume
+    assert all(s.count == 2 for s in net.servers.values())
+
+
+def test_nbytes_accounting():
+    assert nbytes(b"abcd") == 4
+    assert nbytes(("t", b"abcd", 7)) == 16 + 1 + 4 + 8
+    assert nbytes(None) == 1
+    assert nbytes({"k": b"xy"}) == 16 + 1 + 2
+
+
+def test_message_drops_still_quorum():
+    net = _mknet(5, seed=3, drop_prob=0.1)
+
+    def op():
+        r = yield RPC(dests=tuple(net.servers), msg=("p",), need=2)
+        return len(r)
+
+    assert net.run_op(op()) == 2

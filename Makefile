@@ -1,0 +1,27 @@
+# One-command CI surface for a clean checkout (ISSUE 1 satellite).
+#
+#   make test          tier-1 suite + repair/erasure/sim focus run
+#   make tier1         exactly the ROADMAP tier-1 command
+#   make repair-tests  repair subsystem + batched-coding + sim tests only
+#   make bench-repair  durability-restoration / interference benchmark
+#   make dev-deps      install optional dev extras (real hypothesis)
+#
+# The suite runs WITHOUT hypothesis installed (tests/_propfallback.py).
+
+PY ?= python
+
+.PHONY: test tier1 repair-tests bench-repair dev-deps
+
+tier1:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+repair-tests:
+	PYTHONPATH=src $(PY) -m pytest -q tests/test_repair.py tests/test_erasure.py tests/test_sim.py
+
+test: tier1 repair-tests
+
+bench-repair:
+	PYTHONPATH=src $(PY) benchmarks/bench_repair.py
+
+dev-deps:
+	$(PY) -m pip install -r requirements-dev.txt

@@ -14,7 +14,8 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent.parent))
 
-BENCHES = ["kernels", "filesize", "aws", "scalability", "blocksize", "recon", "checkpoint"]
+BENCHES = ["kernels", "filesize", "aws", "scalability", "blocksize", "recon",
+           "checkpoint", "repair"]
 
 
 def main() -> None:

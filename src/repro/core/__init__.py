@@ -1,6 +1,8 @@
-"""The paper's contribution: CoARES, CoARESF, EC-DAP/EC-DAPopt (+ checkers)."""
+"""The paper's contribution: CoARES, CoARESF, EC-DAP/EC-DAPopt (+ checkers),
+plus the beyond-paper self-healing repair subsystem (``repro.core.repair``)."""
 from repro.core.coares import CoAresClient, StaticCoverableClient
 from repro.core.fragment import FragmentationModule, decode_block_value, encode_block_value, genesis_id
+from repro.core.repair import RepairController
 from repro.core.server import StorageServer
 from repro.core.store import ALGORITHMS, DSS, ClientHandle, DSSParams
 from repro.core.tags import TAG0, Config, CSeqEntry, OpRecord, Tag, next_tag
@@ -9,6 +11,7 @@ __all__ = [
     "CoAresClient",
     "StaticCoverableClient",
     "FragmentationModule",
+    "RepairController",
     "StorageServer",
     "DSS",
     "DSSParams",

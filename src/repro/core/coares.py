@@ -14,6 +14,18 @@ from repro.core.tags import TAG0, Config, CSeqEntry, F, OpRecord, P, Tag, digest
 from repro.net.sim import RPC, Sleep
 
 
+def _register_precode(dap_state: dict, values) -> None:
+    """Replace the client's pending batch-encode set: drop stale caches from
+    the previous update, then register the new values (singletons and empty
+    sets gain nothing from batching and are skipped)."""
+    dap_state.pop("_batch_values", None)
+    for key in [k for k in dap_state if isinstance(k, tuple) and k[:1] == ("_ecache",)]:
+        del dap_state[key]
+    vals = {v for v in values if v}
+    if len(vals) > 1:
+        dap_state["_batch_values"] = vals
+
+
 class CoAresClient:
     """A client process (reader / writer / reconfigurer) of CoARES."""
 
@@ -35,6 +47,13 @@ class CoAresClient:
 
     def _record(self, **kw) -> None:
         self.history.append(OpRecord(**kw))
+
+    def precode(self, values) -> None:
+        """Register the byte values an imminent multi-block update will write.
+        EC DAPs batch-encode the whole set with one fused GF(256) matmul on
+        first use (bit-identical to per-value encoding, see
+        ``RSCode.encode_bytes_batch``); ABD DAPs ignore the hint."""
+        _register_precode(self.dap_state, values)
 
     # ---------------------------------------------------- config discovery
     def read_config(self, obj: str) -> Generator:
@@ -213,6 +232,10 @@ class StaticCoverableClient:
 
     def _record(self, **kw) -> None:
         self.history.append(OpRecord(**kw))
+
+    def precode(self, values) -> None:
+        """See ``CoAresClient.precode``."""
+        _register_precode(self.dap_state, values)
 
     def cvr_write(self, obj: str, value: Any) -> Generator:
         t0 = self.net.now

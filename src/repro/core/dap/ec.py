@@ -103,12 +103,33 @@ class EcDap(DapClient):
             yield Sleep(float(self.net.rng.uniform(0.5e-3, 2e-3)))
         raise RuntimeError(f"ec get-data exceeded {_MAX_RETRIES} retries on {obj}")
 
+    # -- batched encode (ISSUE 1): FM pre-registers a multi-block update's
+    # values via client.precode(); the FIRST block write then encodes the
+    # whole batch through one fused GF(256) matmul (RSCode.encode_bytes_batch,
+    # bit-identical to per-value encoding) and later writes hit the cache.
+    def _encode_value(self, value_b: bytes) -> tuple[list[bytes], int]:
+        ckey = ("_ecache", self.config.n, self.config.k)
+        cache = self.client_state.get(ckey)
+        if cache is not None and value_b in cache:
+            return cache[value_b]
+        pending = self.client_state.get("_batch_values")
+        if pending and value_b in pending and len(pending) > 1:
+            batch = sorted(pending)  # deterministic encode order
+            coded = dict(zip(batch, self.code.encode_bytes_batch(batch)))
+            if cache is None:
+                cache = coded
+            else:
+                cache.update(coded)
+            self.client_state[ckey] = cache
+            return cache[value_b]
+        return self.code.encode_bytes(value_b)
+
     def put_data(self, obj: str, tag: Tag, value: Any) -> Generator:
         local_tag, _ = self._local(obj)
         if self.optimized and tag <= local_tag:
             return None  # Alg 4:20 — servers already up to date
         value_b = b"" if value is None else value
-        frag_rows, orig = self.code.encode_bytes(value_b)
+        frag_rows, orig = self._encode_value(value_b)
         per_dest = {
             sid: (
                 "ec-put",

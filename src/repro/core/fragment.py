@@ -85,6 +85,13 @@ class FragmentationModule:
         # flags sequential block requests as its main read overhead (§VII-D).
         self.indexed = indexed
 
+    def _precode(self, writes: list[tuple[str, bytes]]) -> None:
+        """Hand the update's block values to the DSM so EC DAPs batch-encode
+        them in one fused GF(256) matmul (ISSUE 1; no-op for ABD)."""
+        precode = getattr(self.dsm, "precode", None)
+        if precode is not None and writes:
+            precode([raw for _bid, raw in writes])
+
     # ------------------------------------------------------------------ ids
     def _new_block_id(self, fid: str) -> str:
         seq = self.clseq.get(fid, 0) + 1
@@ -207,6 +214,7 @@ class FragmentationModule:
                 for bid, data in final
                 if bid not in old_data or old_data[bid] != data
             ]
+            self._precode(writes)
 
             def write_op(bid, raw):
                 res = yield from self.dsm.cvr_write(bid, raw)
@@ -239,6 +247,7 @@ class FragmentationModule:
                 nxt = final[pos + 1][0] if pos + 1 < len(final) else None
                 if bid not in old_state or old_state[bid] != (nxt, data):
                     writes.append((bid, encode_block_value(nxt, data)))
+            self._precode(writes)
             for bid, raw in reversed(writes):
                 is_new = bid not in old_state
                 (tag, _v), flag = yield from self.dsm.cvr_write(bid, raw)

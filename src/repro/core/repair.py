@@ -1,0 +1,182 @@
+"""Self-healing fragment repair & rebalance (beyond-paper, ISSUE 1 tentpole).
+
+The paper's liveness guarantee for EC-DAPopt (Thm 18) holds only while
+<= (n-k)/2 servers of a configuration have crashed — but nothing in ARES
+ever *restores* redundancy: a server that recovers with a stale or wiped
+List keeps serving old state until a full reconfiguration rewrites the
+object. Liquid Cloud Storage (Luby et al., PAPERS.md) shows that lazy
+background repair is what keeps erasure-coded stores durable at scale;
+this module adds that missing loop.
+
+``RepairController`` scans one configuration's servers for missing or
+stale coded fragments (per object, per tag), pulls any k surviving
+fragments with the ``ec-repair-pull`` server message, rebuilds the lost
+rows (one decode + one fused GF(256) matmul via
+``RSCode.reconstruct_fragments``) and pushes them back with
+``ec-repair-push``. Everything is a sim generator: repair traffic rides
+the same virtual-time latency model as foreground reads/writes, so the
+benchmarks can measure interference (``benchmarks/bench_repair.py``).
+
+Safety under concurrent writes
+------------------------------
+Repair never regresses a server's List to an older tag:
+
+* ``ec-repair-push`` only *adds* an element for a tag the server has never
+  seen; it never overwrites an element and never resurrects a trimmed
+  ``(tag, ⊥)`` placeholder. Inserting cannot remove newer tags, and the
+  handler re-applies the same δ+1 trim as ``ec-put``, so the List-length
+  invariant (Alg 5) is preserved.
+* The pushed element is the *bit-identical* coded row the writer would
+  have sent (MDS determinism), so a reader that decodes with repaired
+  fragments obtains exactly the written value — C2 is untouched.
+* Repair writes no tags of its own, so tag uniqueness / monotonicity
+  (the atomicity checkers in ``tests/checkers.py``) are unaffected.
+
+A racing put-data can at worst make the repaired tag obsolete, in which
+case the trim quietly drops it again — wasted work, never lost safety.
+"""
+from __future__ import annotations
+
+from typing import Any, Generator
+
+import numpy as np
+
+from repro.core.tags import TAG0, Config, OpRecord, Tag
+from repro.erasure.rs import RSCode
+from repro.net.sim import Join, RPC, Sleep
+
+
+class RepairController:
+    """Scans an erasure-coded configuration and restores lost redundancy.
+
+    All public methods are sim generators (drive them with ``Network.spawn``
+    / ``run_op``); ``DSS.repair`` wraps the common whole-store pass.
+    """
+
+    def __init__(
+        self,
+        net,
+        config: Config,
+        cfg_idx: int = 0,
+        *,
+        client_id: str = "repair",
+        history: list | None = None,
+        backend: str = "numpy",
+    ):
+        if config.dap not in ("ec", "ec_opt"):
+            raise ValueError(
+                f"repair applies to erasure-coded configurations, not {config.dap!r}"
+            )
+        self.net = net
+        self.config = config
+        self.cfg_idx = cfg_idx
+        self.client_id = client_id
+        self.history = history if history is not None else []
+        self.code = RSCode(n=config.n, k=config.k, backend=backend)
+
+    # ------------------------------------------------------------------ scan
+    def scan(self, obj: str) -> Generator:
+        """Pull List snapshots from every live server of the configuration.
+
+        Returns ``(replies, frags, holders, t_star)`` where ``frags`` maps
+        tag -> {fragment index: element}, ``holders`` maps tag -> {sid}, and
+        ``t_star`` is the maximum tag decodable from >= k surviving coded
+        elements (TAG0 when nothing real is stored)."""
+        replies = yield RPC(
+            dests=self.config.servers,
+            msg=("ec-repair-pull", obj, self.cfg_idx),
+            need="alive",
+        )
+        frags: dict[Tag, dict[int, Any]] = {}
+        holders: dict[Tag, set[str]] = {}
+        for sid, (_kindtok, lst) in replies.items():
+            fidx = self.config.frag_index(sid)
+            for t, e in lst:
+                if e is not None:
+                    frags.setdefault(t, {})[fidx] = e
+                    holders.setdefault(t, set()).add(sid)
+        decodable = [t for t, m in frags.items() if len(m) >= self.config.k]
+        t_star = max(decodable, default=TAG0)
+        return replies, frags, holders, t_star
+
+    # ---------------------------------------------------------------- repair
+    def repair_object(self, obj: str) -> Generator:
+        """Restore every live server's coded element at the newest decodable
+        tag. Returns a stats dict (scanned / missing / pushed / applied)."""
+        t0 = self.net.now
+        replies, frags, holders, t_star = yield from self.scan(obj)
+        stats = {
+            "obj": obj,
+            "tag": t_star,
+            "scanned": len(replies),
+            "missing": 0,
+            "pushed": 0,
+            "applied": 0,
+        }
+        if t_star == TAG0:
+            # only the initial sentinel (t0, Φ_i(v0)) exists — nothing real
+            # was ever written (or too few fragments survive to rebuild).
+            self._record(t0, stats)
+            return stats
+        missing = [s for s in replies if s not in holders.get(t_star, set())]
+        stats["missing"] = len(missing)
+        if not missing:
+            self._record(t0, stats)
+            return stats
+        fmap = frags[t_star]
+        idxs = sorted(fmap)[: self.config.k]
+        orig = fmap[idxs[0]][1]
+        mat = np.stack(
+            [np.frombuffer(fmap[i][0], dtype=np.uint8) for i in idxs], axis=0
+        )
+        targets = [self.config.frag_index(s) for s in missing]
+        rows = self.code.reconstruct_fragments(targets, mat, idxs)
+        # charge the rebuild at the model's client-side coding rates
+        yield Sleep(
+            self.net.latency.dec_per_byte * mat.size
+            + self.net.latency.enc_per_byte * rows.size
+        )
+        per_dest = {
+            sid: (
+                "ec-repair-push",
+                obj,
+                self.cfg_idx,
+                t_star,
+                (rows[j].tobytes(), orig),
+                self.config.delta,
+            )
+            for j, sid in enumerate(missing)
+        }
+        acks = yield RPC(
+            dests=tuple(missing), msg=None, per_dest=per_dest, need="alive"
+        )
+        stats["pushed"] = len(missing)
+        stats["applied"] = sum(1 for a in acks.values() if a[1])
+        self._record(t0, stats)
+        return stats
+
+    def scan_and_repair(self, objs, *, parallel: bool = False) -> Generator:
+        """Repair a set of objects; ``parallel=True`` overlaps them (Join),
+        the default walks them sequentially (gentler on foreground traffic)."""
+        objs = list(objs)
+        if parallel:
+            results = yield Join([self.repair_object(o) for o in objs])
+            return results
+        out = []
+        for obj in objs:
+            out.append((yield from self.repair_object(obj)))
+        return out
+
+    # --------------------------------------------------------------- record
+    def _record(self, t0: float, stats: dict) -> None:
+        self.history.append(
+            OpRecord(
+                kind="repair",
+                obj=stats["obj"],
+                client=self.client_id,
+                start=t0,
+                end=self.net.now,
+                tag=stats["tag"],
+                extra=dict(stats),
+            )
+        )

@@ -33,6 +33,16 @@ class StorageServer(Server):
         # initial List = {(t0, Φ_i(v0))}; v0 = None encoded as the sentinel
         return self.ec.setdefault(key, {TAG0: ("", 0)})
 
+    @staticmethod
+    def _trim_list(lst: dict[Tag, Any], delta: int) -> None:
+        # Alg 5:15-18: trim the *coded value* of the minimum tags while more
+        # than δ+1 hold one (the (τ_min, ⊥) placeholders remain).
+        full = [t for t, e in lst.items() if e is not None]
+        while len(full) > delta + 1:
+            tmin = min(full)
+            lst[tmin] = None
+            full.remove(tmin)
+
     # ---------------------------------------------------------------- handler
     def handle(self, sender: str, msg: tuple) -> Any:
         op = msg[0]
@@ -76,12 +86,33 @@ class StorageServer(Server):
             _, obj, idx, tag, elem, delta = msg
             lst = self._ec_list((obj, idx))
             lst[tag] = elem
-            full = [t for t, e in lst.items() if e is not None]
-            while len(full) > delta + 1:
-                tmin = min(full)
-                lst[tmin] = None
-                full.remove(tmin)
+            self._trim_list(lst, delta)
             return ("ack",)
+        if op == "ec-repair-pull":
+            # Repair scan (beyond-paper, ISSUE 1): full List snapshot — every
+            # tag this server knows, with its coded element where one is still
+            # held (None = trimmed ⊥ / placeholder). Unlike ec-query this
+            # never filters by a client tag: the repair controller needs to
+            # see exactly what is missing or stale.
+            _, obj, idx = msg
+            lst = self._ec_list((obj, idx))
+            return ("ec-repair-list", [(t, e) for t, e in lst.items()])
+        if op == "ec-repair-push":
+            # Monotone repair insert: only ADDS a coded element for a tag this
+            # server has never seen. It never overwrites an existing element,
+            # never resurrects a trimmed (tag, ⊥) placeholder (the server
+            # already moved past that tag), and re-applies the δ+1 trim so the
+            # List bound holds. A racing ec-put therefore can never be
+            # regressed by repair traffic: newer tags stay, and a pushed tag
+            # older than the trim window is trimmed right back out.
+            _, obj, idx, tag, elem, delta = msg
+            lst = self._ec_list((obj, idx))
+            applied = False
+            if tag not in lst:
+                lst[tag] = elem
+                applied = True
+                self._trim_list(lst, delta)
+            return ("repair-ack", applied)
         if op == "read-next":
             _, obj, idx = msg
             return ("next-c", self.next_c.get((obj, idx)))

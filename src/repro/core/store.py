@@ -155,5 +155,44 @@ class DSS:
         for s in ids:
             self.net.crash(s)
 
+    def recover_servers(self, ids: list[str]) -> None:
+        """Crash-recovery: the server rejoins with whatever List state it had
+        when it crashed — i.e. stale. Run ``repair`` to restore redundancy."""
+        for s in ids:
+            self.net.recover(s)
+
+    def wipe_servers(self, ids: list[str]) -> None:
+        """Disk-loss recovery: drop all EC fragment state (the ABD register
+        and config state survive — the interesting loss is the coded rows)."""
+        for s in ids:
+            self.net.servers[s].ec.clear()
+
+    # --- repair -----------------------------------------------------------------
+    def ec_objects(self, cfg_idx: int = 0) -> list[str]:
+        """Names of every object holding EC state at configuration ``cfg_idx``
+        (for fragmented algorithms these are the genesis + data blocks)."""
+        objs: set[str] = set()
+        for srv in self.net.servers.values():
+            for obj, idx in getattr(srv, "ec", {}):
+                if idx == cfg_idx:
+                    objs.add(obj)
+        return sorted(objs)
+
+    def repair(self, objs=None, config: Config | None = None, cfg_idx: int = 0,
+               client_id: str = "repair") -> list[dict]:
+        """Run a full repair pass to quiescence and return per-object stats.
+        Defaults to every EC object of the initial configuration; pass
+        ``config``/``cfg_idx`` after a reconfiguration."""
+        from repro.core.repair import RepairController
+
+        cfg = config or self.c0
+        rc = RepairController(
+            self.net, cfg, cfg_idx, client_id=client_id, history=self.history
+        )
+        todo = self.ec_objects(cfg_idx) if objs is None else list(objs)
+        return self.net.run_op(
+            rc.scan_and_repair(todo), kind="repair-pass", client=client_id
+        )
+
     def run(self, **kw) -> None:
         self.net.run(**kw)

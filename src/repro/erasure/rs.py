@@ -115,11 +115,100 @@ class RSCode:
             return data[target_idx]
         return self._matmul(self._parity[target_idx - self.k : target_idx - self.k + 1], data)[0]
 
+    def reconstruct_fragments(
+        self, target_idxs: list[int], fragments: np.ndarray, indices: list[int]
+    ) -> np.ndarray:
+        """Rebuild several lost fragments with one decode + one fused matmul.
+
+        Returns (len(target_idxs), L) rows in target order. Used by the
+        repair controller, which typically replaces every fragment a set of
+        recovered servers lost at once."""
+        data = self.decode(fragments, indices)
+        if not target_idxs:
+            return np.zeros((0, data.shape[1]), dtype=np.uint8)
+        gen = np.stack([self.generator_row(i) for i in target_idxs], axis=0)
+        return np.asarray(self._matmul(gen, data))
+
+    # -- batched coding (single fused GF(256) matmul over many blocks) -------
+    def encode_batch(self, data: np.ndarray) -> np.ndarray:
+        """(B, k, L) uint8 -> (B, n, L) coded blocks via ONE matmul.
+
+        GF(256) matmul acts column-wise, so the B blocks are laid side by
+        side as one (k, B*L) operand; the product splits back into per-block
+        parity bit-identically to B separate ``encode`` calls. On the kernel
+        backend this is one Pallas launch instead of B."""
+        data = np.asarray(data, dtype=np.uint8)
+        if data.ndim != 3 or data.shape[1] != self.k:
+            raise ValueError(f"expected (B, {self.k}, L) blocks, got {data.shape}")
+        B, _, L = data.shape
+        if B == 0:
+            return np.zeros((0, self.n, L), dtype=np.uint8)
+        if self.m == 0:
+            return data.copy()
+        flat = np.ascontiguousarray(data.transpose(1, 0, 2)).reshape(self.k, B * L)
+        parity = np.asarray(self._matmul(self._parity, flat))
+        parity = parity.reshape(self.m, B, L).transpose(1, 0, 2)
+        return np.concatenate([data, parity], axis=1)
+
+    def decode_batch(self, fragments: np.ndarray, indices: list[int]) -> np.ndarray:
+        """(B, k, L) fragment blocks sharing ONE index set -> (B, k, L) data.
+
+        The common case for batched reads: every block lost the same servers,
+        so one inverted generator serves the whole batch in a single matmul."""
+        fragments = np.asarray(fragments, dtype=np.uint8)
+        if fragments.ndim != 3:
+            raise ValueError(f"expected (B, k, L) fragment blocks, got {fragments.shape}")
+        if len(indices) != len(set(indices)):
+            raise ValueError("duplicate fragment indices")
+        if fragments.shape[1] < self.k or len(indices) < self.k:
+            raise ValueError(
+                f"need {self.k} fragments per block to decode, got {fragments.shape[1]}"
+            )
+        B, _, L = fragments.shape
+        idxs = list(indices)[: self.k]
+        frs = fragments[:, : self.k, :]
+        if B == 0 or idxs == list(range(self.k)):
+            return frs.copy()  # all-systematic fast path
+        gen = np.stack([self.generator_row(i) for i in idxs], axis=0)
+        dec = gf_invert_matrix(gen)
+        flat = np.ascontiguousarray(frs.transpose(1, 0, 2)).reshape(self.k, B * L)
+        out = np.asarray(self._matmul(dec, flat))
+        return np.ascontiguousarray(out.reshape(self.k, B, L).transpose(1, 0, 2))
+
     # -- bytes-level convenience (object values in the DAPs) -----------------
     def encode_bytes(self, value: bytes) -> tuple[list[bytes], int]:
         rows, orig = bytes_to_rows(value, self.k)
         coded = self.encode(rows)
         return [coded[i].tobytes() for i in range(self.n)], orig
+
+    def encode_bytes_batch(self, values: list[bytes]) -> list[tuple[list[bytes], int]]:
+        """Batch ``encode_bytes`` over many byte strings with ONE fused matmul.
+
+        Blocks are zero-padded to the longest row length before the shared
+        product; because the GF matmul is column-wise, truncating each
+        block's fragments back to its own length is bit-identical to calling
+        ``encode_bytes`` per value. Returns [(fragments, orig_len)] aligned
+        with ``values``."""
+        if not values:
+            return []
+        rows: list[np.ndarray] = []
+        origs: list[int] = []
+        for v in values:
+            r, o = bytes_to_rows(v, self.k)
+            rows.append(r)
+            origs.append(o)
+        lmax = max(r.shape[1] for r in rows)
+        batch = np.zeros((len(values), self.k, lmax), dtype=np.uint8)
+        for b, r in enumerate(rows):
+            batch[b, :, : r.shape[1]] = r
+        coded = self.encode_batch(batch)
+        out: list[tuple[list[bytes], int]] = []
+        for b, r in enumerate(rows):
+            lb = r.shape[1]
+            out.append(
+                ([coded[b, i, :lb].tobytes() for i in range(self.n)], origs[b])
+            )
+        return out
 
     def decode_bytes(
         self, fragments: dict[int, bytes], orig_len: int

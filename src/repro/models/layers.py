@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.models.sharding import shard_map_compat
 
 
 def dt(cfg: ArchConfig):
@@ -307,7 +308,7 @@ def moe_layer(x, wr, w_gate, w_up, w_down, *, top_k: int, capacity_factor: float
         aux = jax.lax.pmean(aux_loc, axis_name=all_axes)
         return y.reshape(xs.shape), aux
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map_compat(
         body,
         mesh=mesh,
         in_specs=(

@@ -40,10 +40,14 @@ def nbytes(obj: Any) -> int:
         return len(obj)
     if isinstance(obj, str):
         return len(obj)
+    if isinstance(obj, bool):  # before int: bool is an int subclass
+        return 1
     if isinstance(obj, (int, float)):
         return 8
-    if isinstance(obj, bool):
-        return 1
+    if isinstance(obj, np.ndarray):
+        return 16 + int(obj.nbytes)
+    if isinstance(obj, np.generic):
+        return int(obj.nbytes)
     if isinstance(obj, (tuple, list, set, frozenset)):
         return 16 + sum(nbytes(x) for x in obj)
     if isinstance(obj, dict):
@@ -77,12 +81,19 @@ class RPC:
     """Send ``msg`` to every server in ``dests``; resume the op generator once
     ``need`` distinct servers replied. The generator receives ``{sid: reply}``.
 
+    ``need`` may be the string ``"alive"``: it resolves to the number of
+    destinations whose server is live at issue time (resuming immediately
+    with ``{}`` when none are). This is the server-addressed pull the repair
+    subsystem uses — "everyone who can answer", without hanging on crashed
+    servers. It assumes no crashes land between issue and reply (true for
+    the crash-injection tests; lossy nets should stick to quorum counts).
+
     ``per_dest`` (optional) overrides ``msg`` per server — used by the EC
     put-data, which ships a *different coded fragment* to each server."""
 
     dests: tuple
     msg: Any
-    need: int
+    need: int | str
     # extra client-side compute charged before sending (e.g. encode cost)
     pre_delay: float = 0.0
     per_dest: dict | None = None
@@ -250,7 +261,15 @@ class Network:
     ) -> None:
         replies: dict[str, Any] = {}
         state = {"resumed": False}
-        need = min(rpc.need, len(rpc.dests))
+        if rpc.need == "alive":
+            need = sum(
+                1
+                for sid in rpc.dests
+                if (srv := self.servers.get(sid)) is not None and not srv.crashed
+            )
+        else:
+            need = rpc.need
+        need = min(need, len(rpc.dests))
 
         def deliver_reply(sid: str, reply: Any) -> None:
             if state["resumed"]:
@@ -292,3 +311,13 @@ class Network:
                 self.schedule(delay, arrive)
 
         self.schedule(rpc.pre_delay, send_all)
+        if need <= 0:
+            # nothing can (or needs to) reply — messages still go out, but the
+            # op resumes immediately with no replies (guarded against a
+            # straggler reply re-resuming the generator).
+            def resume_empty() -> None:
+                if not state["resumed"]:
+                    state["resumed"] = True
+                    self._step(gen, fut, {}, on_done)
+
+            self.schedule(rpc.pre_delay, resume_empty)

@@ -13,7 +13,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.models.sharding import MeshCtx
+from repro.models.sharding import MeshCtx, shard_map_compat
 
 Pytree = Any
 
@@ -196,7 +196,7 @@ def adamw_update_sharded(params, grads, state, cfg: AdamWConfig, ctx: MeshCtx,
                 p2 = p2_s
             return p2, m2, v2
 
-        return jax.shard_map(
+        return shard_map_compat(
             body,
             mesh=mesh,
             in_specs=(pspec.spec, pspec.spec, zspec.spec, zspec.spec, P()),

@@ -1,0 +1,133 @@
+"""Seeded-random fallback for ``hypothesis`` (satellite of ISSUE 1).
+
+The tier-1 suite uses a small, fixed subset of hypothesis:
+
+    @settings(max_examples=N, deadline=None)
+    @given(st.integers(...), st.sampled_from(...), st.binary(...),
+           st.lists(...), st.tuples(...))
+
+When the real package is installed (see ``requirements-dev.txt``) the tests
+import it unchanged and get true shrinking/coverage. When it is absent — the
+default container has no ``hypothesis`` — this module provides API-compatible
+decorators that run each property N times on values drawn from a
+deterministically-seeded ``numpy`` RNG (seed derived from the test's qualified
+name, so failures reproduce across runs and machines).
+
+This is intentionally NOT a re-implementation of hypothesis: no shrinking, no
+database, no assume/health checks. It exists so the suite *collects and
+passes* on a clean checkout.
+"""
+from __future__ import annotations
+
+import zlib
+from types import SimpleNamespace
+from typing import Any, Callable
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class SearchStrategy:
+    """A draw rule: ``draw(rng) -> value`` (mirrors hypothesis' objects)."""
+
+    def __init__(self, draw: Callable[[np.random.Generator], Any], label: str = "?"):
+        self._draw = draw
+        self.label = label
+
+    def draw(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"SearchStrategy({self.label})"
+
+
+def _integers(min_value: int = 0, max_value: int = 2**16) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        f"integers({min_value}, {max_value})",
+    )
+
+
+def _binary(min_size: int = 0, max_size: int = 64) -> SearchStrategy:
+    def draw(rng: np.random.Generator) -> bytes:
+        n = int(rng.integers(min_size, max_size + 1))
+        return rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+
+    return SearchStrategy(draw, f"binary({min_size}, {max_size})")
+
+
+def _sampled_from(elements) -> SearchStrategy:
+    pool = list(elements)
+    return SearchStrategy(
+        lambda rng: pool[int(rng.integers(0, len(pool)))],
+        f"sampled_from({pool!r})",
+    )
+
+
+def _lists(elements: SearchStrategy, *, min_size: int = 0, max_size: int = 8) -> SearchStrategy:
+    def draw(rng: np.random.Generator) -> list:
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+
+    return SearchStrategy(draw, f"lists({elements.label})")
+
+
+def _tuples(*parts: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(p.draw(rng) for p in parts),
+        f"tuples({', '.join(p.label for p in parts)})",
+    )
+
+
+strategies = SimpleNamespace(
+    integers=_integers,
+    binary=_binary,
+    sampled_from=_sampled_from,
+    lists=_lists,
+    tuples=_tuples,
+)
+
+
+def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Decorator factory: records ``max_examples`` for the ``given`` wrapper.
+
+    Applied *outside* ``given`` (hypothesis' usual stacking), so it just tags
+    the already-wrapped function.
+    """
+
+    def apply(fn):
+        fn._propfallback_max_examples = max_examples
+        return fn
+
+    return apply
+
+
+def given(*strategies_pos: SearchStrategy):
+    """Run the test once per example with values drawn from the strategies."""
+
+    def decorate(fn):
+        # NOTE: no ``functools.wraps`` — that copies ``__wrapped__`` and pytest
+        # would then introspect the original signature and demand fixtures for
+        # the drawn parameters. The wrapper must look zero-argument.
+        def wrapper():
+            n = getattr(wrapper, "_propfallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+            base_seed = zlib.crc32(fn.__qualname__.encode())
+            for example in range(n):
+                rng = np.random.default_rng((base_seed, example))
+                drawn = tuple(s.draw(rng) for s in strategies_pos)
+                try:
+                    fn(*drawn)
+                except Exception as exc:  # annotate with the failing example
+                    raise AssertionError(
+                        f"falsifying example #{example} for {fn.__qualname__}: "
+                        f"args={drawn!r}"
+                    ) from exc
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return decorate

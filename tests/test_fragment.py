@@ -1,8 +1,12 @@
 """CoARESF / fragmented-object behaviour (§V): BI, connectivity, concurrency."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # seeded fallback shim — see tests/_propfallback.py
+    from _propfallback import given, settings
+    from _propfallback import strategies as st
 
 from checkers import check_all
 from repro.core import DSS, DSSParams

@@ -1,8 +1,12 @@
 """Pallas cdc_gearhash kernel vs pure-jnp oracle + chunking invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # seeded fallback shim — see tests/_propfallback.py
+    from _propfallback import given, settings
+    from _propfallback import strategies as st
 
 from repro.kernels.cdc_gearhash.ops import boundary_bitmap, gearhash, split_chunks
 from repro.kernels.cdc_gearhash.ref import gearhash_ref

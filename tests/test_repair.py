@@ -1,0 +1,233 @@
+"""Self-healing fragment repair (ISSUE 1 tentpole).
+
+Scenarios: crash up to f = ⌊(n-k)/2⌋ servers mid-workload, recover them with
+stale (or wiped) Lists, run the RepairController, and check that
+
+* every live server again holds a decodable coded element at the max tag,
+* a subsequent crash of a *different* f servers still allows reads,
+* recorded histories still pass the atomicity/coverability checkers,
+* repair never regresses server state under concurrent writes.
+"""
+import numpy as np
+import pytest
+
+from checkers import check_all, check_atomicity, check_coverability
+from repro.core import DSS, DSSParams, RepairController, TAG0
+from repro.core.repair import RepairController as _RC  # module import path
+from repro.erasure import RSCode
+from repro.net.sim import Sleep
+
+
+def _blob(seed, size):
+    return np.random.default_rng(seed).integers(0, 256, size, dtype=np.uint8).tobytes()
+
+
+def _full_tags(dss, sid, obj, idx=0):
+    """Tags for which server ``sid`` still holds a coded element."""
+    lst = dss.net.servers[sid].ec.get((obj, idx), {})
+    return {t for t, e in lst.items() if e is not None}
+
+
+def _max_decodable_tag(dss, obj, k, idx=0, servers=None):
+    """Max tag with >= k coded elements across the given (default live) servers."""
+    servers = servers if servers is not None else dss.net.alive()
+    counts = {}
+    for sid in servers:
+        for t in _full_tags(dss, sid, obj, idx):
+            counts[t] = counts.get(t, 0) + 1
+    good = [t for t, c in counts.items() if c >= k]
+    return max(good, default=TAG0)
+
+
+def _assert_all_live_decodable(dss, obj, cfg, idx=0):
+    """Every live server holds an element at the max decodable tag, and the
+    elements really decode (MDS bit-identity, not just presence)."""
+    t_star = _max_decodable_tag(dss, obj, cfg.k, idx)
+    frags = {}
+    for sid in dss.net.alive():
+        tags = _full_tags(dss, sid, obj, idx)
+        assert t_star in tags, f"{sid} missing element at max tag {t_star} for {obj}"
+        elem = dss.net.servers[sid].ec[(obj, idx)][t_star]
+        frags[cfg.frag_index(sid)] = elem
+    # decode from an arbitrary k-subset that includes a repaired server
+    code = RSCode(n=cfg.n, k=cfg.k)
+    idxs = sorted(frags)[: cfg.k]
+    orig = frags[idxs[0]][1]
+    got = code.decode_bytes({i: frags[i][0] for i in idxs}, orig)
+    idxs2 = sorted(frags)[-cfg.k:]
+    got2 = code.decode_bytes({i: frags[i][0] for i in idxs2}, frags[idxs2[0]][1])
+    assert got == got2, "different k-subsets decode to different values"
+    return t_star, got
+
+
+# n=6, parity_m=4 -> k=2, f = (n-k)/2 = 2
+_PARAMS = dict(algorithm="coaresec", n_servers=6, parity_m=4, seed=11)
+
+
+def test_repair_restores_stale_recovered_servers():
+    dss = DSS(DSSParams(**_PARAMS))
+    cfg = dss.c0
+    f = (cfg.n - cfg.k) // 2
+    w = dss.client("w")
+    v1 = _blob(1, 4000)
+    dss.net.run_op(w.update("f", v1), client="w")
+    # crash f servers mid-workload; writes keep completing via the quorum
+    down1 = ["s0", "s1"]
+    assert len(down1) == f
+    dss.crash_servers(down1)
+    v2, v3 = _blob(2, 4000), _blob(3, 4100)
+    dss.net.run_op(w.update("f", v2), client="w")
+    dss.net.run_op(w.update("f", v3), client="w")
+    # crash-recover: they come back with STALE Lists (missed v2, v3)
+    dss.recover_servers(down1)
+    t_star = _max_decodable_tag(dss, "f", cfg.k)
+    for sid in down1:
+        assert t_star not in _full_tags(dss, sid, "f"), "precondition: stale"
+    stats = dss.repair()
+    assert stats[0]["applied"] == len(down1)
+    t_after, decoded = _assert_all_live_decodable(dss, "f", cfg)
+    assert t_after == t_star and decoded == v3
+    # a DIFFERENT f crashes: reads must still complete and return v3
+    dss.crash_servers(["s2", "s3"])
+    r = dss.client("r")
+    assert dss.net.run_op(r.read("f"), client="r") == v3
+    check_all(dss.history)
+
+
+def test_repair_restores_wiped_servers():
+    """Disk-loss recovery: the rejoining servers lost ALL coded fragments."""
+    dss = DSS(DSSParams(**_PARAMS))
+    cfg = dss.c0
+    w = dss.client("w")
+    v = _blob(4, 6000)
+    dss.net.run_op(w.update("f", v), client="w")
+    dss.crash_servers(["s4", "s5"])
+    dss.wipe_servers(["s4", "s5"])
+    dss.recover_servers(["s4", "s5"])
+    assert _full_tags(dss, "s4", "f") == set()
+    dss.repair()
+    _, decoded = _assert_all_live_decodable(dss, "f", cfg)
+    assert decoded == v
+    check_all(dss.history)
+
+
+def test_repair_noop_when_healthy():
+    dss = DSS(DSSParams(**_PARAMS))
+    w = dss.client("w")
+    dss.net.run_op(w.update("f", _blob(5, 1000)), client="w")
+    stats = dss.repair()
+    assert stats[0]["missing"] == 0 and stats[0]["pushed"] == 0
+    # and on a never-written store the pass is a clean no-op at TAG0
+    fresh = DSS(DSSParams(**_PARAMS))
+    assert fresh.repair(objs=["ghost"])[0]["tag"] == TAG0
+
+
+def test_repair_fragmented_file_all_blocks():
+    """coaresecf: repair every block object of a fragmented file."""
+    dss = DSS(DSSParams(algorithm="coaresecf", n_servers=6, parity_m=4, seed=13,
+                        min_block=256, avg_block=512, max_block=2048))
+    cfg = dss.c0
+    w = dss.client("w")
+    blob = _blob(6, 10_000)
+    dss.net.run_op(w.update("f", blob), client="w")
+    dss.crash_servers(["s0", "s1"])
+    blob2 = blob[:4000] + _blob(7, 800) + blob[4000:]
+    dss.net.run_op(w.update("f", blob2), client="w")
+    dss.recover_servers(["s0", "s1"])
+    stats = dss.repair()
+    assert len(stats) == len(dss.ec_objects())
+    for obj in dss.ec_objects():
+        _assert_all_live_decodable(dss, obj, cfg)
+    dss.crash_servers(["s2", "s3"])
+    r = dss.client("r")
+    assert dss.net.run_op(r.read("f"), client="r") == blob2
+    check_all(dss.history)
+
+
+def test_repair_safe_under_concurrent_writes():
+    """Repair racing foreground writers must never regress server Lists or
+    break atomicity/coverability; the final read returns the last write."""
+    dss = DSS(DSSParams(**_PARAMS, delta=4))
+    cfg = dss.c0
+    w = dss.client("w")
+    dss.net.run_op(w.update("f", _blob(8, 3000)), client="w")
+    dss.crash_servers(["s0", "s1"])
+    dss.net.run_op(w.update("f", _blob(9, 3000)), client="w")
+    dss.recover_servers(["s0", "s1"])
+
+    last = {}
+
+    def writer_loop():
+        for i in range(6):
+            yield Sleep(float(dss.net.rng.uniform(0, 1e-3)))
+            blob = _blob(100 + i, 2500 + 17 * i)
+            (tag, _v), flag = yield from w.dsm.cvr_write("f", blob)
+            if flag == "chg":
+                last[tag] = blob
+        return True
+
+    rc = RepairController(dss.net, cfg, 0, history=dss.history)
+    futs = [
+        dss.net.spawn(writer_loop(), client="w"),
+        dss.net.spawn(rc.scan_and_repair(["f"]), client="repair"),
+        dss.net.spawn(rc.scan_and_repair(["f"]), client="repair", delay=2e-3),
+    ]
+    dss.net.run()
+    assert all(f.done for f in futs)
+    # no regression: a final repair pass leaves every live server decodable
+    dss.repair()
+    _t, decoded = _assert_all_live_decodable(dss, "f", cfg)
+    assert decoded == last[max(last)]
+    r = dss.client("r")
+    assert dss.net.run_op(r.read("f"), client="r") == last[max(last)]
+    check_atomicity(dss.history)
+    check_coverability(dss.history)
+
+
+def test_repair_push_never_regresses_or_resurrects():
+    """Server-level safety: a pushed tag never overwrites existing elements,
+    and a trimmed (tag, ⊥) placeholder stays trimmed."""
+    dss = DSS(DSSParams(**_PARAMS, delta=1))
+    srv = dss.net.servers["s0"]
+    # simulate a List that advanced and trimmed tag (1, 'w')
+    for ts in (1, 2, 3):
+        srv.handle("w", ("ec-put", "f", 0, (ts, "w"), (bytes([ts]), 1), 1))
+    lst = srv.ec[("f", 0)]
+    assert lst[(1, "w")] is None  # trimmed
+    # push for the trimmed tag: must NOT resurrect
+    kind, applied = srv.handle("rc", ("ec-repair-push", "f", 0, (1, "w"), (b"Z", 1), 1))
+    assert kind == "repair-ack" and not applied and lst[(1, "w")] is None
+    # push for an existing full tag: must NOT overwrite
+    kind, applied = srv.handle("rc", ("ec-repair-push", "f", 0, (3, "w"), (b"Z", 1), 1))
+    assert not applied and lst[(3, "w")] == (bytes([3]), 1)
+    # push for an unseen tag: applied, and the δ+1 trim still holds
+    kind, applied = srv.handle("rc", ("ec-repair-push", "f", 0, (4, "w"), (b"Q", 1), 1))
+    assert applied
+    full = [t for t, e in lst.items() if e is not None]
+    assert len(full) <= 2 and max(full) == (4, "w")
+
+
+def test_repair_requires_ec_config():
+    dss = DSS(DSSParams(algorithm="coaresabd", n_servers=5, seed=1))
+    with pytest.raises(ValueError):
+        _RC(dss.net, dss.c0)
+
+
+def test_repair_skips_undecodable_tag():
+    """With fewer than k surviving elements at the newest tag, repair falls
+    back to the newest still-decodable tag instead of fabricating data."""
+    dss = DSS(DSSParams(**_PARAMS))  # k=2
+    cfg = dss.c0
+    w = dss.client("w")
+    v1 = _blob(20, 2000)
+    dss.net.run_op(w.update("f", v1), client="w")
+    # fabricate a half-written newer tag on ONE server only (k=2 needed)
+    srv = dss.net.servers["s5"]
+    lst = srv.ec[("f", 0)]
+    newest = max(t for t, e in lst.items() if e is not None)
+    orphan = (newest[0] + 7, "ghost")
+    srv.handle("w", ("ec-put", "f", 0, orphan, (b"\x00" * 1000, 1000), cfg.delta))
+    stats = dss.repair()
+    assert stats[0]["tag"] != orphan  # repaired the decodable tag, not the orphan
+    t_star, decoded = _assert_all_live_decodable(dss, "f", cfg)
+    assert decoded == v1

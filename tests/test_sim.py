@@ -129,6 +129,59 @@ def test_nbytes_accounting():
     assert nbytes({"k": b"xy"}) == 16 + 1 + 2
 
 
+def test_nbytes_ndarray_payloads():
+    """np.ndarray must be sized by its buffer, not the generic 64-byte default
+    (that undercounting skewed the latency model for array-valued messages)."""
+    a = np.zeros((4, 8), dtype=np.uint8)
+    assert nbytes(a) == 16 + 32
+    big = np.zeros(1 << 16, dtype=np.float32)
+    assert nbytes(big) == 16 + (1 << 18)
+    assert nbytes(("frag", a)) == 16 + 4 + 16 + 32
+    # numpy scalars: their own itemsize, not 64
+    assert nbytes(np.uint8(3)) == 1
+    assert nbytes(np.float64(1.5)) == 8
+
+
+def test_ndarray_payload_drives_latency():
+    """A large array message must take longer than a tiny one (bandwidth term)."""
+    times = {}
+    for name, payload in [("small", np.zeros(8, np.uint8)),
+                          ("large", np.zeros(1 << 20, np.uint8))]:
+        net = _mknet(1, base_lo=1e-4, base_hi=1e-4, bandwidth=125e6)
+
+        def op(p=payload):
+            yield RPC(dests=("s0",), msg=("data", p), need=1)
+            return None
+
+        net.run_op(op())
+        times[name] = net.now
+    assert times["large"] > times["small"] * 10
+
+
+def test_rpc_need_alive_counts_live_destinations():
+    net = _mknet(5)
+    net.crash("s0")
+    net.crash("s1")
+
+    def op():
+        replies = yield RPC(dests=tuple(net.servers), msg=("ping",), need="alive")
+        return sorted(replies)
+
+    assert net.run_op(op()) == ["s2", "s3", "s4"]
+
+
+def test_rpc_need_alive_all_crashed_resumes_empty():
+    net = _mknet(3)
+    for s in list(net.servers):
+        net.crash(s)
+
+    def op():
+        replies = yield RPC(dests=tuple(net.servers), msg=("ping",), need="alive")
+        return replies
+
+    assert net.run_op(op()) == {}
+
+
 def test_message_drops_still_quorum():
     net = _mknet(5, seed=3, drop_prob=0.1)
 

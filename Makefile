@@ -1,16 +1,19 @@
-# One-command CI surface for a clean checkout (ISSUE 1 satellite).
+# One-command CI surface for a clean checkout (ISSUE 1/2 satellites).
 #
 #   make test          tier-1 suite + repair/erasure/sim focus run
 #   make tier1         exactly the ROADMAP tier-1 command
 #   make repair-tests  repair subsystem + batched-coding + sim tests only
+#   make batch-tests   batched state-transfer path tests only
 #   make bench-repair  durability-restoration / interference benchmark
+#   make bench-readpath  batched vs per-object read-path benchmark
+#   make bench-smoke   every benchmark harness at its smallest point (CI)
 #   make dev-deps      install optional dev extras (real hypothesis)
 #
 # The suite runs WITHOUT hypothesis installed (tests/_propfallback.py).
 
 PY ?= python
 
-.PHONY: test tier1 repair-tests bench-repair dev-deps
+.PHONY: test tier1 repair-tests batch-tests bench-repair bench-readpath bench-smoke dev-deps
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -18,10 +21,19 @@ tier1:
 repair-tests:
 	PYTHONPATH=src $(PY) -m pytest -q tests/test_repair.py tests/test_erasure.py tests/test_sim.py
 
+batch-tests:
+	PYTHONPATH=src $(PY) -m pytest -q tests/test_batchpath.py tests/test_dap_properties.py
+
 test: tier1 repair-tests
 
 bench-repair:
 	PYTHONPATH=src $(PY) benchmarks/bench_repair.py
+
+bench-readpath:
+	PYTHONPATH=src $(PY) benchmarks/bench_readpath.py
+
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.smoke
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

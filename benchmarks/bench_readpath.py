@@ -1,0 +1,64 @@
+"""§VII-D — "sequential per-block requests dominate the read overhead".
+
+Indexed-FM EC read path, before/after the ISSUE 2 batching refactor: for a
+B-block file, a cold reader either issues B independent per-block quorum ops
+(``batched=False`` — the previous Join-based path) or ONE multi-object
+``ec-query-batch`` round with a single fused GF(256) decode (``batched=True``).
+Reported per point: quorum-round count, ``msg_count``, ``bytes_sent`` and
+virtual-time read latency. Also includes the paper's own baseline — the
+non-indexed linked-list walk — for scale.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+from benchmarks.common import make_dss
+
+SIZES = [1 << 20, 1 << 22, 1 << 24]   # 1, 4, 16 MB (128-256 KiB blocks)
+N_SERVERS = 11
+PARITY = 5
+
+
+def _one(size: int, *, indexed: bool, batched: bool, seed: int = 59) -> dict:
+    dss = make_dss("coaresecf", n_servers=N_SERVERS, parity=PARITY, seed=seed,
+                   indexed=indexed, batched=batched)
+    doc = np.random.default_rng(seed).integers(0, 256, size, dtype=np.uint8).tobytes()
+    w = dss.client("w")
+    stats = dss.net.run_op(w.update("f", doc), client="w")
+    r = dss.client("r")   # cold reader: no local (c.tag, c.val) cache
+    r0, m0, b0, t0 = (dss.net.rpc_rounds, dss.net.msg_count,
+                      dss.net.bytes_sent, dss.net.now)
+    got = dss.net.run_op(r.read("f"), client="r")
+    assert got == doc, "read returned different bytes"
+    return {
+        "blocks": stats["blocks"],
+        "quorum_rounds": dss.net.rpc_rounds - r0,
+        "msg_count": dss.net.msg_count - m0,
+        "MB_sent": (dss.net.bytes_sent - b0) / 1e6,
+        "read_ms": (dss.net.now - t0) * 1e3,
+    }
+
+
+def run() -> list[dict]:
+    rows = []
+    for size in SIZES:
+        for label, indexed, batched in (
+            ("walk", False, True),          # paper baseline: linked-list walk
+            ("indexed", True, False),       # pre-ISSUE-2: Join of B quorum ops
+            ("indexed+batch", True, True),  # ISSUE 2: one batched round
+        ):
+            rows.append({
+                "bench": "readpath", "path": label, "file_size": size,
+                **_one(size, indexed=indexed, batched=batched),
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -38,7 +38,7 @@ class WorkloadResult:
 
 def make_dss(algorithm: str, n_servers: int, parity: int, seed: int,
              block: tuple[int, int, int] = (1 << 17, 1 << 18, 1 << 20),
-             indexed: bool = False) -> DSS:
+             indexed: bool = False, batched: bool = True) -> DSS:
     # Latency model calibrated to the paper's Emulab LAN: sub-ms base RTT,
     # 1 Gbit/s — block transfers (2 ms at 256 KiB) dominate round trips,
     # the same regime as the paper's 1 MB blocks.
@@ -46,7 +46,7 @@ def make_dss(algorithm: str, n_servers: int, parity: int, seed: int,
     return DSS(DSSParams(
         algorithm=algorithm, n_servers=n_servers, parity_m=parity, seed=seed,
         min_block=block[0], avg_block=block[1], max_block=block[2],
-        latency=lat, indexed=indexed,
+        latency=lat, indexed=indexed, batched=batched,
     ))
 
 

@@ -15,7 +15,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).parent.parent))
 
 BENCHES = ["kernels", "filesize", "aws", "scalability", "blocksize", "recon",
-           "checkpoint", "repair"]
+           "checkpoint", "repair", "readpath"]
 
 
 def main() -> None:
@@ -36,8 +36,8 @@ def main() -> None:
             r = dict(r)
             bench = r.pop("bench", name)
             us = None
-            for k in ("write_ms", "save_full_ms", "restore_ms", "cpu_ref_MBps",
-                      "cpu_MBps"):
+            for k in ("write_ms", "read_ms", "save_full_ms", "restore_ms",
+                      "cpu_ref_MBps", "cpu_MBps"):
                 if k in r:
                     us = r[k] * 1e3 if k.endswith("_ms") else r[k]
                     break

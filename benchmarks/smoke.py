@@ -1,0 +1,93 @@
+"""Bench-harness smoke: each benchmark family's smallest point (ISSUE 2 CI).
+
+Runs one tiny configuration through every benchmark's machinery —
+``make_dss``/``run_workload``, the repair trial, the read-path trial, the
+checkpoint store and the kernel timers — so an API drift in the harness
+breaks CI in seconds instead of silently rotting until the next full
+benchmark run. Numbers printed here are NOT meaningful measurements.
+
+    make bench-smoke        # or: PYTHONPATH=src python -m benchmarks.smoke
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+from benchmarks.common import make_dss, run_workload
+
+BLOCK = (1 << 10, 1 << 11, 1 << 13)
+SIZE = 1 << 15  # 32 KiB files
+
+
+def run() -> list[dict]:
+    rows = []
+
+    # --- filesize / scalability / blocksize family: one tiny workload ------
+    for alg in ("coabdf", "coaresec", "coaresecf"):
+        dss = make_dss(alg, n_servers=5, parity=1, seed=1, block=BLOCK)
+        res = run_workload(dss, file_size=SIZE, n_writers=1, n_readers=1,
+                           ops_each=1, seed=2)
+        rows.append({"bench": "smoke_workload", "algorithm": alg, **res.row()})
+
+    # --- recon family: one live reconfiguration with DAP flip --------------
+    dss = make_dss("coaresecf", n_servers=5, parity=1, seed=3, block=BLOCK,
+                   indexed=True)
+    res = run_workload(dss, file_size=SIZE, n_writers=1, n_readers=1,
+                       ops_each=1, recons=1, recon_int=0.005,
+                       recon_plan=[("abd", 5)], seed=4)
+    rows.append({"bench": "smoke_recon", "algorithm": "coaresecf", **res.row()})
+
+    # --- aws family: the WAN latency model --------------------------------
+    from benchmarks.bench_aws import _dss as aws_dss
+
+    res = run_workload(aws_dss("coaresecf", indexed=True), file_size=SIZE,
+                       n_writers=1, n_readers=1, ops_each=1, seed=5)
+    rows.append({"bench": "smoke_aws", "algorithm": "coaresecf+pidx", **res.row()})
+
+    # --- readpath family: smallest size, all three paths -------------------
+    from benchmarks.bench_readpath import _one as readpath_one
+
+    for label, indexed, batched in (("walk", False, True),
+                                    ("indexed+batch", True, True)):
+        rows.append({"bench": "smoke_readpath", "path": label,
+                     **readpath_one(1 << 18, indexed=indexed, batched=batched)})
+
+    # --- repair family: one crash/recover/repair trial ---------------------
+    from benchmarks.bench_repair import _one_trial
+
+    rows.append({"bench": "smoke_repair", **_one_trial(1, with_repair=True)})
+
+    # --- checkpoint family: tiny train state -------------------------------
+    from benchmarks.bench_checkpoint import _fake_state
+    from repro.train.checkpoint import ECCheckpointStore
+
+    store = ECCheckpointStore(n_hosts=6, parity=1, algorithm="coaresecf",
+                              seed=6, min_block=BLOCK[0], avg_block=BLOCK[1],
+                              max_block=BLOCK[2], indexed=True)
+    store.save(1, _fake_state(0.25, seed=7))
+    store.restore()
+    rows.append({"bench": "smoke_checkpoint",
+                 "MB_sent": store.dss.net.bytes_sent / 1e6})
+
+    # --- kernels family: one small RS encode + CDC pass --------------------
+    from repro.erasure import RSCode
+    from repro.kernels.cdc_gearhash.ops import split_chunks
+
+    code = RSCode(n=6, k=4)
+    data = np.random.default_rng(8).integers(0, 256, (3, 4, 1 << 10),
+                                             dtype=np.uint8)
+    assert code.decode_batch(code.encode_batch(data)[:, :4], [0, 1, 2, 3]).shape == data.shape
+    chunks = split_chunks(bytes(data.reshape(-1)), min_size=256, avg_size=512,
+                          max_size=2048)
+    rows.append({"bench": "smoke_kernels", "chunks": len(chunks)})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)
+    print("smoke: all benchmark harnesses ran", file=sys.stderr)

@@ -1,8 +1,15 @@
 """The paper's contribution: CoARES, CoARESF, EC-DAP/EC-DAPopt (+ checkers),
 plus the beyond-paper self-healing repair subsystem (``repro.core.repair``)."""
 from repro.core.coares import CoAresClient, StaticCoverableClient
-from repro.core.fragment import FragmentationModule, decode_block_value, encode_block_value, genesis_id
-from repro.core.repair import RepairController
+from repro.core.fragment import (
+    FragmentationModule,
+    decode_block_value,
+    encode_block_value,
+    encode_genesis_meta,
+    genesis_id,
+    parse_genesis_meta,
+)
+from repro.core.repair import RepairController, RepairDaemon
 from repro.core.server import StorageServer
 from repro.core.store import ALGORITHMS, DSS, ClientHandle, DSSParams
 from repro.core.tags import TAG0, Config, CSeqEntry, OpRecord, Tag, next_tag
@@ -12,6 +19,7 @@ __all__ = [
     "StaticCoverableClient",
     "FragmentationModule",
     "RepairController",
+    "RepairDaemon",
     "StorageServer",
     "DSS",
     "DSSParams",
@@ -26,4 +34,6 @@ __all__ = [
     "genesis_id",
     "encode_block_value",
     "decode_block_value",
+    "encode_genesis_meta",
+    "parse_genesis_meta",
 ]

@@ -15,6 +15,19 @@ metadata + head pointer) followed by data blocks. The Block Identification
 
 ``fm_reconfig`` (Alg 3) walks the list and issues dsmm-reconfig (Alg 2) on
 every block, genesis included (§V text).
+
+Genesis metadata (unified schema, ISSUE 2): BOTH modes store the pickled
+ordered block-id index in the genesis block, so indexed readers can batch
+block I/O over files written by either mode. ``parse_genesis_meta`` stays
+tolerant of the legacy non-indexed schema (a raw 4-byte block count), for
+which readers fall back to the linked-list walk.
+
+Batched block I/O (ISSUE 2): with an index present, ``fm_read``/``fm_update``
+/``fm_reconfig`` ride the DSM's multi-object batch operations — ONE quorum
+fan-out carries every block (O(1) quorum rounds instead of O(#blocks)), and
+the EC DAP decodes/encodes the whole file with one fused GF(256) matmul.
+``batched=False`` keeps the per-object path (a Join of independent quorum
+ops) for ablation benchmarks.
 """
 from __future__ import annotations
 
@@ -23,7 +36,7 @@ import pickle
 from difflib import SequenceMatcher
 from typing import Any, Generator
 
-from repro.core.tags import TAG0, Config, OpRecord
+from repro.core.tags import Config, OpRecord
 from repro.kernels.cdc_gearhash.ops import split_chunks
 from repro.net.sim import Sleep
 
@@ -47,6 +60,26 @@ def decode_block_value(raw: bytes | None) -> tuple[str | None, bytes]:
     return ptr, raw[2 + plen :]
 
 
+def encode_genesis_meta(index: list[str]) -> bytes:
+    """Unified genesis metadata: the full ordered block-id index."""
+    return pickle.dumps(list(index), protocol=2)
+
+
+def parse_genesis_meta(meta: bytes) -> list[str] | None:
+    """Return the block index, or None for the legacy schema (the non-indexed
+    mode used to store a raw 4-byte block count; pickle protocol-2 streams
+    start with 0x80, a count < 2^24 cannot)."""
+    if not meta or meta[:1] != b"\x80":
+        return None
+    try:
+        index = pickle.loads(meta)
+    except Exception:
+        return None
+    if isinstance(index, (list, tuple)) and all(isinstance(b, str) for b in index):
+        return list(index)
+    return None
+
+
 def _h(data: bytes) -> bytes:
     return hashlib.sha1(data).digest()
 
@@ -55,8 +88,9 @@ class FragmentationModule:
     """Binds a DSM client (CoARES or static) to the fragmented-object logic.
 
     ``dsm`` must expose generator methods ``cvr_read(obj)``,
-    ``cvr_write(obj, value)``, ``recon(obj, cfg)`` and a ``version`` dict
-    (coverability state, updated from reads per CoBFS).
+    ``cvr_write(obj, value)``, their multi-object batch forms
+    ``cvr_read_batch``/``cvr_write_batch``, ``recon``/``recon_batch`` and a
+    ``version`` dict (coverability state, updated from reads per CoBFS).
     """
 
     def __init__(
@@ -69,6 +103,7 @@ class FragmentationModule:
         max_block: int = 4096,
         history: list | None = None,
         indexed: bool = False,
+        batched: bool = True,
     ):
         self.net = net
         self.dsm = dsm
@@ -79,15 +114,21 @@ class FragmentationModule:
         self.clseq: dict[str, int] = {}
         # ``indexed`` (beyond-paper, EXPERIMENTS.md §Perf storage iteration):
         # the genesis block stores the full ordered block-id index, so block
-        # reads/writes issue in PARALLEL (Join) instead of walking the linked
+        # reads/writes issue in PARALLEL instead of walking the linked
         # list — O(1) quorum rounds instead of O(#blocks). Connectivity
         # reduces to the single coverable genesis flip. The paper itself
         # flags sequential block requests as its main read overhead (§VII-D).
         self.indexed = indexed
+        # ``batched``: route indexed block I/O through the DSM's multi-object
+        # batch ops (one RPC fan-out, fused EC coding). False = per-object
+        # concurrent ops (Join), kept for the before/after ablation.
+        self.batched = batched
 
     def _precode(self, writes: list[tuple[str, bytes]]) -> None:
         """Hand the update's block values to the DSM so EC DAPs batch-encode
-        them in one fused GF(256) matmul (ISSUE 1; no-op for ABD)."""
+        them in one fused GF(256) matmul (ISSUE 1; no-op for ABD). Only the
+        SEQUENTIAL write paths need the hint — ``cvr_write_batch`` sees the
+        whole batch and encodes it in one shot by itself."""
         precode = getattr(self.dsm, "precode", None)
         if precode is not None and writes:
             precode([raw for _bid, raw in writes])
@@ -103,24 +144,43 @@ class FragmentationModule:
         tag, raw = yield from self.dsm.cvr_read(bid)
         return bid, tag, raw
 
-    def _read_chain(self, fid: str) -> Generator:
-        """Returns [(bid, ptr, data)] — linked-list walk, or (indexed mode)
-        one genesis read + ALL block reads in parallel."""
+    def _read_blocks(self, bids: list[str]) -> Generator:
+        """Read many blocks: ONE batched quorum round (default), or a Join of
+        independent per-block quorum ops (``batched=False`` ablation)."""
+        if self.batched:
+            res = yield from self.dsm.cvr_read_batch(bids)
+            out = []
+            for bid in bids:
+                tag, raw = res[bid]
+                self.dsm.version[bid] = tag
+                out.append((bid, raw))
+            return out
         from repro.net.sim import Join
 
+        results = yield Join([self._read_block_op(b) for b in bids])
+        out = []
+        for bid, btag, braw in results:
+            self.dsm.version[bid] = btag
+            out.append((bid, braw))
+        return out
+
+    def _read_chain(self, fid: str) -> Generator:
+        """Returns [(bid, ptr, data)] — one genesis read + ALL block reads in
+        one batched round (indexed mode with an index present), else the
+        linked-list walk."""
         g = genesis_id(fid)
         tag, raw = yield from self.dsm.cvr_read(g)
         self.dsm.version[g] = tag
         ptr, meta = decode_block_value(raw)
-        if self.indexed:
-            index = pickle.loads(meta) if meta else []
-            results = yield Join([self._read_block_op(b) for b in index])
+        index = parse_genesis_meta(meta)
+        if self.indexed and index is not None:
+            results = yield from self._read_blocks(index)
             blocks = []
-            for bid, btag, braw in results:
-                self.dsm.version[bid] = btag
+            for bid, braw in results:
                 nxt, data = decode_block_value(braw)
                 blocks.append((bid, nxt, data))
             return blocks
+        # linked-list walk: non-indexed mode, or a legacy count-only genesis
         blocks: list[tuple[str, str | None, bytes]] = []
         seen = set()
         while ptr is not None and ptr not in seen:
@@ -181,7 +241,6 @@ class FragmentationModule:
         # back right after their old predecessor.
         if any(d == b"" for _, _, d in old_blocks):
             merged: list[tuple[str | None, bytes]] = []
-            ti = 0
             live_ids = {bid for bid, _ in live}
             tomb_after: dict[str | None, list[str]] = {}
             prev_live: str | None = None
@@ -200,40 +259,46 @@ class FragmentationModule:
         final: list[tuple[str, bytes]] = []
         for bid, data in target:
             final.append((bid if bid is not None else self._new_block_id(fid), data))
-        # --- diff against old state; write back-to-front --------------------
+        # --- diff against old state; write the changed blocks ---------------
         old_state = {bid: (nxt, data) for bid, nxt, data in old_blocks}
         stats = {"written": 0, "collided": 0, "created": 0, "blocks": len(final),
                  "chunks": len(chunks)}
         g = genesis_id(fid)
+        new_index = [bid for bid, _ in final]
+        old_index = [bid for bid, _n, _d in old_blocks]
         if self.indexed:
-            from repro.net.sim import Join
-
             old_data = {bid: data for bid, _n, data in old_blocks}
             writes = [
                 (bid, encode_block_value(None, data))
                 for bid, data in final
                 if bid not in old_data or old_data[bid] != data
             ]
-            self._precode(writes)
+            if self.batched:
+                # one batched coverable write: single quorum fan-out, whole
+                # update encoded by one fused GF(256) matmul inside the DAP
+                results = yield from self.dsm.cvr_write_batch(dict(writes))
+                items = results.items()
+            else:
+                from repro.net.sim import Join
 
-            def write_op(bid, raw):
-                res = yield from self.dsm.cvr_write(bid, raw)
-                return bid, res
+                self._precode(writes)
 
-            results = yield Join([write_op(b, r) for b, r in writes])
-            for bid, ((tag, _v), flag) in results:
+                def write_op(bid, raw):
+                    res = yield from self.dsm.cvr_write(bid, raw)
+                    return bid, res
+
+                items = yield Join([write_op(b, r) for b, r in writes])
+            for bid, ((tag, _v), flag) in items:
                 self.dsm.version[bid] = tag
                 if flag == "chg":
                     stats["written"] += 1
                     stats["created"] += int(bid not in old_state)
                 else:
                     stats["collided"] += 1
-            new_index = [bid for bid, _ in final]
-            old_index = [bid for bid, _n, _d in old_blocks]
             if new_index != old_index:
                 head = final[0][0] if final else None
                 (tag, _v), flag = yield from self.dsm.cvr_write(
-                    g, encode_block_value(head, pickle.dumps(new_index))
+                    g, encode_block_value(head, encode_genesis_meta(new_index))
                 )
                 self.dsm.version[g] = tag
                 if flag == "chg":
@@ -248,6 +313,7 @@ class FragmentationModule:
                 if bid not in old_state or old_state[bid] != (nxt, data):
                     writes.append((bid, encode_block_value(nxt, data)))
             self._precode(writes)
+            # write back-to-front so the list is always connected (Lemma 13)
             for bid, raw in reversed(writes):
                 is_new = bid not in old_state
                 (tag, _v), flag = yield from self.dsm.cvr_write(bid, raw)
@@ -257,13 +323,11 @@ class FragmentationModule:
                     stats["created"] += int(is_new)
                 else:
                     stats["collided"] += 1
-            # --- genesis: repoint head if needed -----------------------------
-            new_head = final[0][0] if final else None
-            old_head = old_blocks[0][0] if old_blocks else None
-            if new_head != old_head:
-                meta = len(final).to_bytes(4, "big")
+            # --- genesis: repoint head / refresh the index if changed --------
+            if new_index != old_index:
+                new_head = final[0][0] if final else None
                 (tag, _v), flag = yield from self.dsm.cvr_write(
-                    g, encode_block_value(new_head, meta)
+                    g, encode_block_value(new_head, encode_genesis_meta(new_index))
                 )
                 self.dsm.version[g] = tag
                 if flag == "chg":
@@ -282,46 +346,46 @@ class FragmentationModule:
 
     # --------------------------------------------------------------- recon
     def fm_reconfig(self, fid: str, new_config: Config) -> Generator:
-        """Alg 3: walk the list issuing dsmm-reconfig (Alg 2) per block.
-        Indexed mode recons all blocks concurrently."""
+        """Alg 3: issue dsmm-reconfig (Alg 2) on every block, genesis
+        included. With an index present all data blocks ride ONE batched
+        recon (batched consensus + one batched state transfer); a legacy
+        count-only genesis falls back to the linked-list walk, reusing the
+        (tag, value) each recon already transferred instead of re-reading
+        every block."""
         t0 = self.net.now
         g = genesis_id(fid)
-        yield from self.dsm.recon(g, new_config)
-        tag, raw = yield from self.dsm.cvr_read(g)
-        self.dsm.version[g] = tag
-        ptr, meta = decode_block_value(raw)
-        if self.indexed:
-            from repro.net.sim import Join
+        res = yield from self.dsm.recon_batch((g,), new_config)
+        _cfg, gtag, graw = res[g]
+        self.dsm.version[g] = gtag
+        ptr, meta = decode_block_value(graw)
+        index = parse_genesis_meta(meta)
+        if index is not None:
+            if self.batched:
+                yield from self.dsm.recon_batch(index, new_config)
+            else:
+                from repro.net.sim import Join
 
-            index = pickle.loads(meta) if meta else []
+                def recon_op(bid):
+                    yield from self.dsm.recon(bid, new_config)
+                    return bid
 
-            def recon_op(bid):
-                yield from self.dsm.recon(bid, new_config)
-                return bid
-
-            yield Join([recon_op(b) for b in index])
+                yield Join([recon_op(b) for b in index])
             n = 1 + len(index)
-            self.history.append(
-                OpRecord(
-                    kind="fm-recon", obj=fid, client=self.dsm.client_id,
-                    start=t0, end=self.net.now,
-                    extra={"n_blocks": n, "config": new_config.cfg_id},
-                )
-            )
-            return n
-        n = 1
-        seen = set()
-        while ptr is not None and ptr not in seen:
-            seen.add(ptr)
-            yield from self.dsm.recon(ptr, new_config)
-            tag, raw = yield from self.dsm.cvr_read(ptr)
-            self.dsm.version[ptr] = tag
-            ptr, _ = decode_block_value(raw)
-            n += 1
+        else:
+            n = 1
+            seen = set()
+            while ptr is not None and ptr not in seen:
+                seen.add(ptr)
+                bres = yield from self.dsm.recon_batch((ptr,), new_config)
+                _bcfg, btag, braw = bres[ptr]
+                self.dsm.version[ptr] = btag
+                ptr, _ = decode_block_value(braw)
+                n += 1
         self.history.append(
             OpRecord(
                 kind="fm-recon", obj=fid, client=self.dsm.client_id,
-                start=t0, end=self.net.now, extra={"n_blocks": n, "config": new_config.cfg_id},
+                start=t0, end=self.net.now,
+                extra={"n_blocks": n, "config": new_config.cfg_id},
             )
         )
         return n

@@ -180,3 +180,92 @@ class RepairController:
                 extra=dict(stats),
             )
         )
+
+
+class RepairDaemon:
+    """Rate-limited background repair loop (ISSUE 2) — the steady-state
+    companion to the recon-triggered repair in ``CoAresClient.recon_batch``,
+    replacing explicitly invoked ``DSS.repair`` passes.
+
+    A periodic self-rescheduling generator on the sim: every ``period``
+    virtual seconds one cycle repairs at most ``objs_per_cycle`` objects
+    (round-robin over whatever ``discover(cfg_idx)`` currently returns), so
+    repair traffic is RATE-LIMITED and interferes boundedly with foreground
+    reads/writes (Liquid Cloud Storage's lazy-repair argument: a slow steady
+    repair flow is enough to keep MDS redundancy ahead of failures).
+
+    ``retarget(config, cfg_idx)`` points the daemon at a newly installed
+    configuration after a reconfiguration. The loop runs until ``stop()`` (or
+    ``max_cycles``); remember that ``Network.run()`` drives the event loop to
+    quiescence, so either bound the cycles, stop the daemon, or run with
+    ``until=``.
+    """
+
+    def __init__(
+        self,
+        net,
+        config: Config,
+        cfg_idx: int = 0,
+        *,
+        discover,
+        period: float = 0.05,
+        objs_per_cycle: int = 4,
+        max_cycles: int | None = None,
+        client_id: str = "repaird",
+        history: list | None = None,
+    ):
+        self.net = net
+        self.config = config
+        self.cfg_idx = cfg_idx
+        self.discover = discover          # cfg_idx -> iterable of object names
+        self.period = period
+        self.objs_per_cycle = max(1, objs_per_cycle)
+        self.max_cycles = max_cycles
+        self.client_id = client_id
+        self.history = history if history is not None else []
+        self.stats = {"cycles": 0, "objects": 0, "pushed": 0, "applied": 0}
+        self._stopped = False
+        self._cursor = 0
+        self._fut = None
+
+    def start(self):
+        """Spawn the loop onto the sim; returns the daemon's OpFuture."""
+        self._fut = self.net.spawn(
+            self._loop(), kind="repair-daemon", client=self.client_id
+        )
+        return self._fut
+
+    def stop(self) -> None:
+        """Ask the loop to exit at its next wake-up."""
+        self._stopped = True
+
+    def retarget(self, config: Config, cfg_idx: int) -> None:
+        """Follow a reconfiguration: scan/repair the new configuration from
+        the next cycle on."""
+        self.config = config
+        self.cfg_idx = cfg_idx
+        self._cursor = 0
+
+    def _loop(self) -> Generator:
+        while not self._stopped and (
+            self.max_cycles is None or self.stats["cycles"] < self.max_cycles
+        ):
+            yield Sleep(self.period)
+            if self._stopped:
+                break
+            objs = list(self.discover(self.cfg_idx))
+            if objs:
+                # round-robin window: at most objs_per_cycle objects per wake
+                start = self._cursor % len(objs)
+                take = (objs[start:] + objs[:start])[: self.objs_per_cycle]
+                self._cursor = (start + len(take)) % len(objs)
+                rc = RepairController(
+                    self.net, self.config, self.cfg_idx,
+                    client_id=self.client_id, history=self.history,
+                )
+                results = yield from rc.scan_and_repair(take)
+                self.stats["objects"] += len(results)
+                self.stats["pushed"] += sum(r["pushed"] for r in results)
+                self.stats["applied"] += sum(r["applied"] for r in results)
+            self.stats["cycles"] += 1
+        return dict(self.stats)

@@ -46,6 +46,61 @@ class StorageServer(Server):
     # ---------------------------------------------------------------- handler
     def handle(self, sender: str, msg: tuple) -> Any:
         op = msg[0]
+        # ---- multi-object batch messages (ISSUE 2): one RPC fan-out carries
+        # N objects' payloads; each item is handled exactly as its single-
+        # object form, so batching changes framing, never semantics.
+        if op == "ec-query-batch":
+            # ("ec-query-batch", ((obj, client_tag), ...), idx)
+            _, items, idx = msg
+            return ("ec-list-batch", tuple(
+                self.handle(sender, ("ec-query", obj, idx, ctag))[1]
+                for obj, ctag in items
+            ))
+        if op == "ec-put-batch":
+            # ("ec-put-batch", ((obj, tag, elem), ...), idx, delta) — elem
+            # differs per destination server (its own coded fragment).
+            _, items, idx, delta = msg
+            for obj, tag, elem in items:
+                self.handle(sender, ("ec-put", obj, idx, tag, elem, delta))
+            return ("ack", len(items))
+        if op == "abd-get-batch":
+            # ("abd-get-batch", ((obj, client_tag), ...), idx)
+            _, items, idx = msg
+            return ("abd-val-batch", tuple(
+                self.handle(sender, ("abd-get", obj, idx, ctag))[1:]
+                for obj, ctag in items
+            ))
+        if op == "abd-put-batch":
+            _, items, idx = msg
+            for obj, tag, val in items:
+                self.handle(sender, ("abd-put", obj, idx, tag, val))
+            return ("ack", len(items))
+        if op == "read-next-batch":
+            # ("read-next-batch", ((obj, idx), ...)) — indices may differ per
+            # object (objects of one file can sit at different frontiers).
+            _, items = msg
+            return ("next-c-batch", tuple(
+                self.next_c.get((obj, idx)) for obj, idx in items
+            ))
+        if op == "write-next-batch":
+            _, items = msg
+            for obj, idx, cfg, status in items:
+                self.handle(sender, ("write-next", obj, idx, cfg, status))
+            return ("ack", len(items))
+        if op == "cons-p1-batch":
+            # One Paxos acceptor instance per (obj, idx); the ballot is shared
+            # by the batch but promises are tracked per object.
+            _, objs, idx, ballot = msg
+            return ("p1-batch", tuple(
+                self.handle(sender, ("cons-p1", obj, idx, ballot))
+                for obj in objs
+            ))
+        if op == "cons-p2-batch":
+            _, items, idx, ballot = msg
+            return ("p2-batch", tuple(
+                self.handle(sender, ("cons-p2", obj, idx, ballot, value))
+                for obj, value in items
+            ))
         if op == "abd-get":
             # CoBFS [4] conditional transfer: ship the value only when newer
             # than the client's tag (tag-only reply otherwise).

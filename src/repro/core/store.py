@@ -44,6 +44,10 @@ class DSSParams:
     avg_block: int = 1024
     max_block: int = 4096
     indexed: bool = False  # beyond-paper: genesis holds the block index -> parallel block I/O
+    # ISSUE 2 — unified state-transfer engine knobs:
+    batched: bool = True       # multi-object batch RPCs on the indexed FM path
+    recon_repair: bool = True  # recon finalization spawns repair of the new config
+    recon_repair_delay: float = 0.0
     latency: LatencyModel = dc_field(default_factory=LatencyModel)
 
 
@@ -55,7 +59,11 @@ class ClientHandle:
         self.cid = cid
         reconf, dap, frag = ALGORITHMS[dss.params.algorithm]
         if reconf:
-            self.dsm = CoAresClient(dss.net, cid, dss.c0, history=dss.history)
+            self.dsm = CoAresClient(
+                dss.net, cid, dss.c0, history=dss.history,
+                repair_on_recon=dss.params.recon_repair,
+                recon_repair_delay=dss.params.recon_repair_delay,
+            )
         else:
             self.dsm = StaticCoverableClient(dss.net, cid, dss.c0, history=dss.history)
         self.fragmented = frag
@@ -67,6 +75,7 @@ class ClientHandle:
                 max_block=dss.params.max_block,
                 history=dss.history,
                 indexed=dss.params.indexed,
+                batched=dss.params.batched,
             )
             if frag
             else None
@@ -193,6 +202,37 @@ class DSS:
         return self.net.run_op(
             rc.scan_and_repair(todo), kind="repair-pass", client=client_id
         )
+
+    def start_repair_daemon(
+        self,
+        *,
+        config: Config | None = None,
+        cfg_idx: int = 0,
+        period: float = 0.05,
+        objs_per_cycle: int = 4,
+        max_cycles: int | None = None,
+        client_id: str = "repaird",
+    ):
+        """Launch the rate-limited background repair loop (``RepairDaemon``)
+        over this store's EC objects. Returns the daemon; call
+        ``stop_repair_daemon()`` (or pass ``max_cycles``) before expecting
+        ``net.run()`` to quiesce."""
+        from repro.core.repair import RepairDaemon
+
+        daemon = RepairDaemon(
+            self.net, config or self.c0, cfg_idx,
+            discover=self.ec_objects, period=period,
+            objs_per_cycle=objs_per_cycle, max_cycles=max_cycles,
+            client_id=client_id, history=self.history,
+        )
+        daemon.start()
+        self.repair_daemon = daemon
+        return daemon
+
+    def stop_repair_daemon(self) -> None:
+        daemon = getattr(self, "repair_daemon", None)
+        if daemon is not None:
+            daemon.stop()
 
     def run(self, **kw) -> None:
         self.net.run(**kw)

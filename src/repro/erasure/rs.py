@@ -210,6 +210,41 @@ class RSCode:
             )
         return out
 
+    def decode_bytes_batch(
+        self, items: list[tuple[dict[int, bytes], int]]
+    ) -> list[bytes]:
+        """Decode many byte values with as few GF(256) matmuls as possible.
+
+        ``items`` is ``[(fragments, orig_len)]`` per value (same shape as the
+        ``decode_bytes`` arguments). Values whose chosen k-subset of fragment
+        indices coincides (the common case for a batched read: every block
+        heard from the same quorum) are fused into ONE ``decode_batch``
+        matmul, zero-padded to the group's longest row. Because the GF matmul
+        acts column-wise, padded columns decode to zero and truncating each
+        value back to its own length is bit-identical to per-value
+        ``decode_bytes``. Returns the decoded bytes aligned with ``items``."""
+        out: list[bytes | None] = [None] * len(items)
+        groups: dict[tuple[int, ...], list[int]] = {}
+        for pos, (fragments, _orig) in enumerate(items):
+            idxs = tuple(sorted(fragments.keys())[: self.k])
+            if len(idxs) < self.k:
+                raise ValueError(f"need {self.k} fragments, have {len(idxs)}")
+            groups.setdefault(idxs, []).append(pos)
+        for idxs, positions in groups.items():
+            lens = [len(items[p][0][idxs[0]]) for p in positions]
+            lmax = max(lens)
+            batch = np.zeros((len(positions), self.k, lmax), dtype=np.uint8)
+            for b, p in enumerate(positions):
+                fragments = items[p][0]
+                for r, i in enumerate(idxs):
+                    row = np.frombuffer(fragments[i], dtype=np.uint8)
+                    batch[b, r, : row.size] = row
+            data = self.decode_batch(batch, list(idxs))
+            for b, p in enumerate(positions):
+                rows = np.ascontiguousarray(data[b][:, : lens[b]])
+                out[p] = rows_to_bytes(rows, items[p][1])
+        return out  # type: ignore[return-value]
+
     def decode_bytes(
         self, fragments: dict[int, bytes], orig_len: int
     ) -> bytes:

@@ -71,6 +71,12 @@ class LatencyModel:
     enc_per_byte: float = 0.6e-9     # RS encode  (§VI: encode faster ...)
     dec_per_byte: float = 1.2e-9     # RS decode  (... than decode)
     bi_per_byte: float = 1.0e-9      # FM block identification (rabin/gear+match)
+    # Serialize transmissions per endpoint NIC (ISSUE 2): concurrent messages
+    # share an endpoint's bandwidth instead of each enjoying the full line
+    # rate. Without this, a B-way parallel fan-out of B·L bytes finishes as
+    # fast as one L-byte message — physically impossible, and it hid exactly
+    # the per-message overhead the paper's §VII-D read argument is about.
+    serialize_links: bool = True
 
     def msg_delay(self, rng: np.random.Generator, size: int) -> float:
         return float(rng.uniform(self.base_lo, self.base_hi)) + size / self.bandwidth
@@ -152,6 +158,12 @@ class Network:
         self._op_ids = itertools.count()
         self.msg_count = 0
         self.bytes_sent = 0
+        # quorum rounds: one per RPC effect issued (a fan-out + wait-for-need
+        # counts once, however many servers it touches) — the unit the paper's
+        # §VII-D read-overhead argument is about.
+        self.rpc_rounds = 0
+        # per-endpoint NIC occupancy: (endpoint, "out"|"in") -> busy-until
+        self._busy: dict[tuple[str, str], float] = {}
 
     # -- topology ------------------------------------------------------------
     def add_server(self, server: Server) -> None:
@@ -182,6 +194,30 @@ class Network:
             n += 1
         if n >= max_events:  # pragma: no cover
             raise RuntimeError("simulator event budget exhausted (livelock?)")
+
+    # -- message timing --------------------------------------------------------
+    def transmit_delay(self, src: str, dst: str, size: int, deliver: bool = True) -> float:
+        """Delay until a message sent NOW from ``src`` is delivered at ``dst``.
+
+        Cut-through at the sender, store-and-forward bookkeeping at both
+        NICs: the message occupies ``src``'s uplink and ``dst``'s downlink
+        for size/bandwidth each, queuing behind earlier traffic on the same
+        endpoint (``serialize_links``). On idle links this reduces exactly to
+        the classic ``base + size/bandwidth``. ``deliver=False`` models a
+        message lost in flight: the sender's uplink was still consumed, but
+        nothing queues at (or arrives to) the receiver."""
+        lat = self.latency
+        tx = size / lat.bandwidth
+        prop = float(self.rng.uniform(lat.base_lo, lat.base_hi))
+        if not lat.serialize_links:
+            return prop + tx
+        t_send = max(self.now, self._busy.get((src, "out"), 0.0))
+        self._busy[(src, "out")] = t_send + tx
+        if not deliver:
+            return 0.0
+        t_recv = max(t_send + prop, self._busy.get((dst, "in"), 0.0))
+        self._busy[(dst, "in")] = t_recv + tx
+        return (t_recv + tx) - self.now
 
     # -- op driving ------------------------------------------------------------
     def spawn(
@@ -259,6 +295,7 @@ class Network:
         fut: OpFuture,
         on_done: Callable[[OpFuture], None] | None,
     ) -> None:
+        self.rpc_rounds += 1
         replies: dict[str, Any] = {}
         state = {"resumed": False}
         if rpc.need == "alive":
@@ -288,9 +325,10 @@ class Network:
                 self.msg_count += 1
                 size = nbytes(msg)
                 self.bytes_sent += size
-                if self.rng.random() < self.latency.drop_prob:
+                dropped = self.rng.random() < self.latency.drop_prob
+                delay = self.transmit_delay(fut.client, sid, size, deliver=not dropped)
+                if dropped:
                     continue
-                delay = self.latency.msg_delay(self.rng, size)
 
                 def arrive(srv=srv, sid=sid, msg=msg) -> None:
                     if srv.crashed:
@@ -301,11 +339,12 @@ class Network:
                     rsize = nbytes(reply)
                     self.msg_count += 1
                     self.bytes_sent += rsize
-                    if self.rng.random() < self.latency.drop_prob:
-                        return
-                    rdelay = self.latency.server_compute + self.latency.msg_delay(
-                        self.rng, rsize
+                    rdropped = self.rng.random() < self.latency.drop_prob
+                    rdelay = self.latency.server_compute + self.transmit_delay(
+                        sid, fut.client, rsize, deliver=not rdropped
                     )
+                    if rdropped:
+                        return
                     self.schedule(rdelay, lambda: deliver_reply(sid, reply))
 
                 self.schedule(delay, arrive)

@@ -1,0 +1,316 @@
+"""Batched multi-object state transfer (ISSUE 2): bit-identity with the
+per-object path, O(1) quorum rounds on the indexed FM read, crash/recover
+during batched reads, recon-triggered repair, the repair daemon, the EC
+get-tag local-state fix, and legacy-genesis tolerance."""
+import numpy as np
+import pytest
+
+from checkers import check_all
+from repro.core import DSS, DSSParams, FragmentationModule, TAG0, genesis_id
+from repro.core.coares import CoAresClient
+from repro.core.dap.base import make_dap
+from repro.core.fragment import decode_block_value, encode_block_value
+from repro.core.server import StorageServer
+from repro.core.tags import Config
+from repro.net.sim import Network
+
+
+def _blob(seed, size):
+    return np.random.default_rng(seed).integers(0, 256, size, dtype=np.uint8).tobytes()
+
+
+def _net(n, seed, dap, k):
+    net = Network(seed=seed)
+    sids = tuple(f"s{i}" for i in range(n))
+    for s in sids:
+        net.add_server(StorageServer(s))
+    return net, Config("c0", sids, dap=dap, k=k, delta=8)
+
+
+def _frag_dss(alg="coaresecf", n=6, m=2, seed=3, **kw):
+    kw.setdefault("min_block", 64)
+    kw.setdefault("avg_block", 128)
+    kw.setdefault("max_block", 512)
+    return DSS(DSSParams(algorithm=alg, n_servers=n, parity_m=m, seed=seed, **kw))
+
+
+# ------------------------------------------------- DAP-level bit-identity
+@pytest.mark.parametrize("dap", ["abd", "ec", "ec_opt"])
+def test_get_data_batch_matches_get_data(dap):
+    """get_data_batch(objs) returns exactly what per-object get_data would."""
+    k = 3 if dap != "abd" else 1
+    net, cfg = _net(5, 7, dap, k)
+    w = make_dap(net, "w", cfg, 0, {})
+    objs = [f"o{i}" for i in range(6)]
+    want = {}
+    for i, o in enumerate(objs[:-1]):  # leave o5 unwritten: (TAG0, None)
+        val = _blob(i, 40 + 17 * i)
+        net.run_op(w.put_data(o, (i + 1, "w"), val), client="w")
+        want[o] = ((i + 1, "w"), val)
+    want[objs[-1]] = (TAG0, None)
+    singles = {}
+    r1 = make_dap(net, "r1", cfg, 0, {})
+    for o in objs:
+        singles[o] = net.run_op(r1.get_data(o), client="r1")
+    r2 = make_dap(net, "r2", cfg, 0, {})
+    batched = net.run_op(r2.get_data_batch(objs), client="r2")
+    assert singles == batched == want
+
+
+@pytest.mark.parametrize("dap", ["abd", "ec", "ec_opt"])
+def test_put_data_batch_server_state_identical(dap):
+    """A put_data_batch leaves servers bit-identical to per-object put_data."""
+    k = 3 if dap != "abd" else 1
+    items = [
+        (f"o{i}", (i + 1, "w"), _blob(20 + i, 33 + 29 * i)) for i in range(5)
+    ]
+    net_a, cfg_a = _net(5, 9, dap, k)
+    w_a = make_dap(net_a, "w", cfg_a, 0, {})
+    for o, t, v in items:
+        net_a.run_op(w_a.put_data(o, t, v), client="w")
+    net_b, cfg_b = _net(5, 9, dap, k)
+    w_b = make_dap(net_b, "w", cfg_b, 0, {})
+    net_b.run_op(w_b.put_data_batch(items), client="w")
+    for sid in net_a.servers:
+        sa, sb = net_a.servers[sid], net_b.servers[sid]
+        assert sa.abd == sb.abd
+        assert sa.ec == sb.ec
+
+
+# --------------------------------------------- client-level bit-identity
+@pytest.mark.parametrize("alg", ["coaresecf", "coaresecf-noopt", "coaresabdf", "coabdf"])
+def test_cvr_read_batch_matches_cvr_read(alg):
+    dss = _frag_dss(alg=alg, indexed=True)
+    blob = _blob(1, 12_000)
+    w = dss.client("w")
+    assert dss.net.run_op(w.update("f", blob), client="w")["success"]
+    # recover the block index straight from the genesis block
+    r0 = dss.client("r0")
+    _tag, graw = dss.net.run_op(r0.dsm.cvr_read(genesis_id("f")), client="r0")
+    from repro.core import parse_genesis_meta
+
+    index = parse_genesis_meta(decode_block_value(graw)[1])
+    assert index and len(index) > 5
+    r1, r2 = dss.client("r1"), dss.client("r2")
+    singles = {
+        b: dss.net.run_op(r1.dsm.cvr_read(b), client="r1") for b in index
+    }
+    batched = dss.net.run_op(r2.dsm.cvr_read_batch(index), client="r2")
+    assert singles == batched
+    check_all(dss.history)
+
+
+def test_batched_and_unbatched_stores_serve_same_content():
+    blob = _blob(2, 20_000)
+    edit = bytearray(blob)
+    edit[5_000] ^= 0xFF
+    edit[15_000:15_000] = _blob(3, 400)  # structural insert
+    contents = {}
+    for batched in (False, True):
+        dss = _frag_dss(indexed=True, batched=batched, seed=11)
+        w, r = dss.client("w"), dss.client("r")
+        assert dss.net.run_op(w.update("f", blob), client="w")["success"]
+        assert dss.net.run_op(w.update("f", bytes(edit)), client="w")["success"]
+        contents[batched] = dss.net.run_op(r.read("f"), client="r")
+        check_all(dss.history)
+    assert contents[False] == contents[True] == bytes(edit)
+
+
+# --------------------------------------------------- round/message counts
+def test_indexed_read_is_O1_quorum_rounds():
+    """The acceptance bar: a B-block indexed EC read issues O(1) quorum
+    rounds (genesis read + one batched sweep), not O(B)."""
+    counts = {}
+    for B_seed, size in ((4, 6_000), (5, 48_000)):  # ~25 vs ~200 blocks
+        dss = _frag_dss(indexed=True, seed=13)
+        blob = _blob(B_seed, size)
+        w = dss.client("w")
+        stats = dss.net.run_op(w.update("f", blob), client="w")
+        r = dss.client("r")
+        before = dss.net.rpc_rounds
+        assert dss.net.run_op(r.read("f"), client="r") == blob
+        counts[size] = (stats["blocks"], dss.net.rpc_rounds - before)
+    (b_small, rounds_small), (b_big, rounds_big) = counts.values()
+    assert b_big > 4 * b_small
+    assert rounds_small <= 10 and rounds_big <= 10, counts
+    assert rounds_big == rounds_small, "round count must not scale with B"
+
+
+def test_batched_read_moves_fewer_messages():
+    stats = {}
+    for batched in (False, True):
+        dss = _frag_dss(indexed=True, batched=batched, seed=17)
+        blob = _blob(6, 24_000)
+        w = dss.client("w")
+        dss.net.run_op(w.update("f", blob), client="w")
+        r = dss.client("r")
+        m0, t0 = dss.net.msg_count, dss.net.now
+        assert dss.net.run_op(r.read("f"), client="r") == blob
+        stats[batched] = (dss.net.msg_count - m0, dss.net.now - t0)
+    assert stats[True][0] < stats[False][0] / 10, stats
+    assert stats[True][1] < stats[False][1], stats  # virtual-time latency too
+
+
+# ------------------------------------------------ fault tolerance / safety
+def test_crash_during_batched_read():
+    """Crash f servers while a batched multi-block read is in flight; the
+    read must complete with the correct content, and after recover+repair a
+    DIFFERENT f may fail. History stays atomic/coverable."""
+    # n=6, parity_m=4 -> k=2, f = (n-k)/2 = 2
+    dss = _frag_dss(n=6, m=4, indexed=True, seed=19)
+    blob = _blob(7, 10_000)
+    w = dss.client("w")
+    assert dss.net.run_op(w.update("f", blob), client="w")["success"]
+    r = dss.client("r")
+    fut = dss.net.spawn(r.read("f"), client="r")
+    dss.net.run(until=dss.net.now + 0.0004)  # mid first fan-out
+    assert not fut.done
+    dss.crash_servers(["s0", "s1"])
+    dss.net.run()
+    assert fut.done and fut.result == blob
+    # recover stale, repair, then a different f crashes: reads still serve
+    dss.recover_servers(["s0", "s1"])
+    dss.repair()
+    dss.crash_servers(["s4", "s5"])
+    r2 = dss.client("r2")
+    assert dss.net.run_op(r2.read("f"), client="r2") == blob
+    check_all(dss.history)
+
+
+def _max_decodable(dss, obj, k, idx, servers):
+    counts = {}
+    for sid in servers:
+        lst = dss.net.servers[sid].ec.get((obj, idx), {})
+        for t, e in lst.items():
+            if e is not None:
+                counts[t] = counts.get(t, 0) + 1
+    good = [t for t, c in counts.items() if c >= k]
+    return max(good, default=TAG0)
+
+
+@pytest.mark.parametrize("recon_repair", [False, True])
+def test_recon_finalization_triggers_repair(recon_repair):
+    """A server of the new configuration that missed the recon's transfer put
+    (crashed, recovered later) is healed by the recon-triggered repair pass —
+    and stays stale when recon_repair is off."""
+    dss = DSS(DSSParams(algorithm="coaresec", n_servers=6, parity_m=4, seed=23,
+                        recon_repair=recon_repair, recon_repair_delay=0.2))
+    w = dss.client("w")
+    blob = _blob(8, 4_000)
+    assert dss.net.run_op(w.update("f", blob), client="w")["success"]
+    dss.crash_servers(["s5"])
+    cfg1 = dss.make_config()  # same 6-server set, new configuration c1
+    assert "s5" in cfg1.servers
+    g = dss.client("g")
+    fut = dss.net.spawn(g.recon("f", cfg1), client="g")
+    dss.net.schedule(0.05, lambda: dss.net.recover("s5"))  # before repair fires
+    dss.net.run()
+    assert fut.done
+    t_star = _max_decodable(dss, "f", cfg1.k, 1, [f"s{i}" for i in range(5)])
+    assert t_star > TAG0
+    s5_list = dss.net.servers["s5"].ec.get(("f", 1), {})
+    if recon_repair:
+        assert s5_list.get(t_star) is not None, "recon repair must heal s5"
+    else:
+        assert s5_list.get(t_star) is None, "control: s5 stays stale"
+    check_all(dss.history)
+
+
+def test_repair_daemon_heals_and_stops():
+    dss = DSS(DSSParams(algorithm="coaresec", n_servers=6, parity_m=4, seed=29))
+    w = dss.client("w")
+    dss.net.run_op(w.update("f", _blob(9, 3_000)), client="w")
+    dss.crash_servers(["s0", "s1"])
+    dss.net.run_op(w.update("f", _blob(10, 3_000)), client="w")  # they fall behind
+    dss.wipe_servers(["s0"])
+    dss.recover_servers(["s0", "s1"])
+    daemon = dss.start_repair_daemon(period=0.02, objs_per_cycle=1, max_cycles=8)
+    dss.net.run()
+    assert daemon._fut.done  # bounded cycles -> quiescence
+    assert daemon.stats["applied"] >= 2, daemon.stats
+    t_star = _max_decodable(dss, "f", dss.c0.k, 0, dss.net.alive())
+    for sid in dss.net.alive():
+        assert dss.net.servers[sid].ec[("f", 0)].get(t_star) is not None
+    # unbounded daemon: stop() lets the loop drain
+    d2 = dss.start_repair_daemon(period=0.02, client_id="repaird2")
+    dss.net.run(until=dss.net.now + 0.1)
+    d2.stop()
+    dss.net.run()
+    assert d2._fut.done
+
+
+# ----------------------------------------------------- EC get-tag (Alg 4)
+def test_ec_get_tag_accounts_for_local_state():
+    """EC-DAPopt get_tag must never return a tag older than the value the
+    client already holds (consistent with get_data's Alg 4:10 shortcut)."""
+    net, cfg = _net(5, 31, "ec_opt", k=3)
+    w = make_dap(net, "w", cfg, 0, {})
+    net.run_op(w.put_data("obj", (3, "x"), b"server-state" * 3), client="w")
+    state = {("ec", "obj", cfg.cfg_id): ((5, "z"), b"newer-local" * 3)}
+    c = make_dap(net, "c", cfg, 0, state)
+    assert net.run_op(c.get_tag("obj"), client="c") == (5, "z")
+    # and with no local state it still reports the servers' tag
+    c2 = make_dap(net, "c2", cfg, 0, {})
+    assert net.run_op(c2.get_tag("obj"), client="c2") == (3, "x")
+
+
+@pytest.mark.parametrize("dap", ["ec", "ec_opt"])
+def test_ec_get_tag_geq_completed_put(dap):
+    net, cfg = _net(5, 37, dap, k=3)
+    state = {}
+    w = make_dap(net, "w", cfg, 0, state)
+    for i in range(3):
+        net.run_op(w.put_data("obj", (i + 1, "w"), _blob(40 + i, 64)), client="w")
+        assert net.run_op(w.get_tag("obj"), client="w") >= (i + 1, "w")
+
+
+# ------------------------------------------------- genesis schema (FM §V)
+def _manual_fm(dss, cid, *, indexed, batched=True):
+    dsm = CoAresClient(dss.net, cid, dss.c0, history=dss.history)
+    return FragmentationModule(
+        dss.net, dsm, min_block=64, avg_block=128, max_block=512,
+        history=dss.history, indexed=indexed, batched=batched,
+    )
+
+
+def test_unified_genesis_lets_indexed_clients_read_walked_files():
+    """A file written by the NON-indexed FM now carries the index in its
+    genesis block, so an indexed reader batch-reads it in O(1) rounds."""
+    dss = _frag_dss(indexed=False, seed=41)
+    blob = _blob(11, 9_000)
+    w = dss.client("w")
+    assert dss.net.run_op(w.update("f", blob), client="w")["success"]
+    fm = _manual_fm(dss, "ri", indexed=True)
+    before = dss.net.rpc_rounds
+    content, blocks = dss.net.run_op(fm.fm_read("f"), client="ri")
+    assert content == blob and len(blocks) > 5
+    assert dss.net.rpc_rounds - before <= 10  # index found -> batched sweep
+
+
+def test_legacy_count_genesis_falls_back_to_walk():
+    """fm_read and fm_reconfig stay correct on the legacy genesis schema (a
+    raw block count instead of a pickled index)."""
+    dss = _frag_dss(indexed=False, seed=43)
+    blob = _blob(12, 6_000)
+    w = dss.client("w")
+    assert dss.net.run_op(w.update("f", blob), client="w")["success"]
+    # rewrite the genesis with the legacy schema (same head pointer)
+    g = genesis_id("f")
+    wdsm = w.fm.dsm  # holds the current genesis version from the fm_update
+    _t, graw = dss.net.run_op(wdsm.cvr_read(g), client="w")
+    head, _meta = decode_block_value(graw)
+    legacy = encode_block_value(head, (99).to_bytes(4, "big"))
+    (_tag, _v), flag = dss.net.run_op(wdsm.cvr_write(g, legacy), client="w")
+    assert flag == "chg"
+    # an INDEXED client tolerates it: falls back to the linked-list walk
+    fm = _manual_fm(dss, "ri", indexed=True)
+    content, _ = dss.net.run_op(fm.fm_read("f"), client="ri")
+    assert content == blob
+    # and so does reconfiguration (walk without per-block re-reads)
+    recfm = _manual_fm(dss, "rg", indexed=True)
+    cfg1 = dss.make_config(n_servers=7)
+    n = dss.net.run_op(recfm.fm_reconfig("f", cfg1), client="rg")
+    assert n > 5  # genesis + every data block walked and reconfigured
+    r = dss.client("r")
+    assert dss.net.run_op(r.read("f"), client="r") == blob
+    check_all(dss.history)

@@ -6,14 +6,17 @@
 #   make batch-tests   batched state-transfer path tests only
 #   make bench-repair  durability-restoration / interference benchmark
 #   make bench-readpath  batched vs per-object read-path benchmark
+#   make bench-multifile cross-file Session fan-out vs legacy per-file ops
 #   make bench-smoke   every benchmark harness at its smallest point (CI)
-#   make dev-deps      install optional dev extras (real hypothesis)
+#   make lint          ruff check (the CI lint job; pip install ruff)
+#   make dev-deps      install optional dev extras (real hypothesis, ruff)
 #
 # The suite runs WITHOUT hypothesis installed (tests/_propfallback.py).
 
 PY ?= python
 
-.PHONY: test tier1 repair-tests batch-tests bench-repair bench-readpath bench-smoke dev-deps
+.PHONY: test tier1 repair-tests batch-tests bench-repair bench-readpath \
+        bench-multifile bench-smoke lint dev-deps
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -32,8 +35,14 @@ bench-repair:
 bench-readpath:
 	PYTHONPATH=src $(PY) benchmarks/bench_readpath.py
 
+bench-multifile:
+	PYTHONPATH=src $(PY) benchmarks/bench_multifile.py
+
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.smoke
+
+lint:
+	ruff check src benchmarks examples tests
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

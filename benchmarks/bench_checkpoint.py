@@ -8,8 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.net.sim import LatencyModel
-from repro.train.checkpoint import ECCheckpointStore, serialize_tree
+from repro.train.checkpoint import ECCheckpointStore
 
 
 def _fake_state(mb: float, seed=0):

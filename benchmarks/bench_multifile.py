@@ -1,0 +1,123 @@
+"""ISSUE 3 acceptance — cross-FILE batched scheduling.
+
+An F-file concurrent read/write fan-out under ``coaresecf`` with
+``indexed=True, batched=True``:
+
+* ``session`` — the Session/future API: all F ops land in one coalescing
+  window and ride ONE multi-file batch through the state-transfer engine.
+  The discovery/gather/put stages cost O(1) quorum rounds FLAT in F.
+* ``legacy``  — the per-file ablation baseline: the old pattern of one
+  generator op per file (each itself batched over its blocks, PR 2), spawned
+  concurrently. Quorum rounds scale O(F).
+
+Reported per point: quorum rounds, messages, MB moved (codec-framed wire
+bytes) and virtual-time latency of the whole fan-out, for a read fan-out and
+an incremental-edit write fan-out. Latency separates less dramatically than
+rounds (the NIC serialization model charges the same payload bytes either
+way); rounds/messages are the §VII-D-style metric this refactor targets.
+
+    PYTHONPATH=src python benchmarks/bench_multifile.py
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+from benchmarks.common import make_dss
+from repro.core.api import gather
+
+F_LIST = (1, 2, 4, 8, 16)
+FILE_SIZE = 1 << 16                       # 64 KiB, ~8 blocks per file
+BLOCK = (1 << 12, 1 << 13, 1 << 15)
+N_SERVERS = 11
+PARITY = 5
+
+
+def _setup(F: int, seed: int):
+    dss = make_dss("coaresecf", n_servers=N_SERVERS, parity=PARITY, seed=seed,
+                   block=BLOCK, indexed=True, batched=True)
+    rng = np.random.default_rng(seed)
+    docs = {
+        f"f{i}": rng.integers(0, 256, FILE_SIZE, dtype=np.uint8).tobytes()
+        for i in range(F)
+    }
+    boot = dss.session("boot")
+    assert all(s["success"] for s in gather(*[boot.write(f, d)
+                                              for f, d in docs.items()]))
+    dss.net.run()
+    return dss, docs
+
+
+def _edits(docs: dict, seed: int) -> dict:
+    rng = np.random.default_rng(seed + 1)
+    out = {}
+    for f, d in docs.items():
+        buf = bytearray(d)
+        pos = int(rng.integers(0, len(buf) - 16))
+        buf[pos : pos + 16] = bytes(16)
+        out[f] = bytes(buf)
+    return out
+
+
+def _one(F: int, mode: str, seed: int = 71) -> list[dict]:
+    """One read fan-out + one write fan-out over F files; returns two rows."""
+    dss, docs = _setup(F, seed)
+    edits = _edits(docs, seed)
+    rows = []
+    for phase, payload in (("read", None), ("write", edits)):
+        cid = f"{mode[0]}{phase[0]}"
+        c0 = dss.net.client_totals(cid)
+        t0 = dss.net.now
+        if mode == "session":
+            s = dss.session(cid)
+            if phase == "read":
+                futs = [s.read(f) for f in docs]
+            else:
+                futs = [s.write(f, payload[f]) for f in docs]
+            results = gather(*futs)
+        else:  # legacy: one generator op per file, spawned concurrently
+            h = dss.client(cid)
+            if phase == "read":
+                futs = [dss.net.spawn(h.read(f), client=cid) for f in docs]
+            else:
+                futs = [dss.net.spawn(h.update(f, payload[f]), client=cid)
+                        for f in docs]
+            dss.net.run()
+            assert all(f.done for f in futs)
+            results = [f.result for f in futs]
+        if phase == "read":
+            assert results == list(docs.values()), "read fan-out corrupted"
+        else:
+            assert all(s["success"] for s in results)
+        c1 = dss.net.client_totals(cid)
+        rows.append({
+            "bench": "multifile", "mode": mode, "phase": phase, "files": F,
+            "quorum_rounds": c1[0] - c0[0],
+            "msg_count": c1[1] - c0[1],
+            "MB_sent": (c1[2] - c0[2]) / 1e6,
+            "fanout_ms": (dss.net.now - t0) * 1e3,
+        })
+    return rows
+
+
+def run() -> list[dict]:
+    rows = []
+    for F in F_LIST:
+        for mode in ("legacy", "session"):
+            rows.extend(_one(F, mode))
+    # headline check: session-path discovery/gather rounds are flat in F
+    by_key = {(r["mode"], r["phase"], r["files"]): r["quorum_rounds"]
+              for r in rows}
+    for phase in ("read", "write"):
+        flat = {f: by_key[("session", phase, f)] for f in F_LIST}
+        assert len(set(flat.values())) == 1, f"session {phase} not O(1): {flat}"
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

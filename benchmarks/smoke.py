@@ -1,15 +1,19 @@
 """Bench-harness smoke: each benchmark family's smallest point (ISSUE 2 CI).
 
 Runs one tiny configuration through every benchmark's machinery —
-``make_dss``/``run_workload``, the repair trial, the read-path trial, the
-checkpoint store and the kernel timers — so an API drift in the harness
-breaks CI in seconds instead of silently rotting until the next full
-benchmark run. Numbers printed here are NOT meaningful measurements.
+``make_dss``/``run_workload``, the Session/future API fan-out, the repair
+trial, the read-path and multifile trials, the checkpoint store and the
+kernel timers — so an API drift in the harness breaks CI in seconds instead
+of silently rotting until the next full benchmark run. Numbers printed here
+are NOT meaningful measurements.
 
     make bench-smoke        # or: PYTHONPATH=src python -m benchmarks.smoke
+    python -m benchmarks.smoke --json runs/smoke.json   # CI artifact
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 from pathlib import Path
 
@@ -56,6 +60,33 @@ def run() -> list[dict]:
         rows.append({"bench": "smoke_readpath", "path": label,
                      **readpath_one(1 << 18, indexed=indexed, batched=batched)})
 
+    # --- session API / multifile family (ISSUE 3): a 2-file Workload mix ---
+    from repro.core.api import Workload
+
+    dss = make_dss("coaresecf", n_servers=5, parity=1, seed=40, block=BLOCK,
+                   indexed=True)
+    docs = {f"m{i}": np.random.default_rng(41 + i)
+            .integers(0, 256, SIZE, dtype=np.uint8).tobytes() for i in range(2)}
+    wl = Workload(dss)
+    for fid, doc in docs.items():
+        wl.write("w", fid, doc)           # one coalesced write fan-out...
+    for fid in docs:
+        wl.read("w", fid)                 # ...then one read fan-out (program
+    for fid in docs:                      # order holds within a session)
+        wl.stat("w", fid)
+    results = wl.run()
+    assert results[2] == docs["m0"] and results[3] == docs["m1"]
+    st = wl.futures[0].stats
+    rows.append({"bench": "smoke_session", "files": 2,
+                 "write_rounds": st.rounds, "write_msgs": st.msgs,
+                 "write_MB": st.bytes / 1e6, "batched_with": st.batched_with,
+                 "min_margin": min(r["margin"] for r in results[4:])})
+
+    from benchmarks.bench_multifile import _one as multifile_one
+
+    for mode in ("legacy", "session"):
+        rows.extend(multifile_one(2, mode))
+
     # --- repair family: one crash/recover/repair trial ---------------------
     from benchmarks.bench_repair import _one_trial
 
@@ -88,6 +119,16 @@ def run() -> list[dict]:
 
 
 if __name__ == "__main__":
-    for r in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the rows as a JSON array (CI artifact)")
+    args = ap.parse_args()
+    rows = run()
+    for r in rows:
         print(r)
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(rows, indent=2, default=str))
+        print(f"smoke: wrote {len(rows)} rows to {out}", file=sys.stderr)
     print("smoke: all benchmark harnesses ran", file=sys.stderr)

@@ -1,55 +1,70 @@
-"""Quickstart: the paper's system in 60 lines.
+"""Quickstart: the paper's system in 60 lines — Session/future API.
 
 Spins up a CoARESF deployment (fragmented + erasure-coded + reconfigurable),
-writes a large object, does an incremental edit, survives server crashes,
-and live-reconfigures to a new server set — all on the deterministic
-virtual-time network.
+writes a batch of large objects in ONE coalesced fan-out, reads them back,
+inspects reliability margins, survives server crashes, and live-reconfigures
+to a new server set — all on the deterministic virtual-time network.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import DSS, DSSParams
+from repro.core import DSS, DSSParams, gather
 
 # --- deploy: 8 servers, [n=8, k=6] Reed-Solomon, EC-DAPopt, fragmented -----
 dss = DSS(DSSParams(algorithm="coaresecf", n_servers=8, parity_m=2, seed=0,
-                    min_block=4096, avg_block=16384, max_block=65536))
-writer = dss.client("alice")
-reader = dss.client("bob")
+                    min_block=4096, avg_block=16384, max_block=65536,
+                    indexed=True))
+alice = dss.session("alice")
+bob = dss.session("bob")
 print(f"deployed CoARESECF: n={dss.c0.n} k={dss.c0.k} "
       f"quorum={dss.c0.quorum()} tolerates {(dss.c0.n-dss.c0.k)//2} crashes")
 
-# --- write a 1 MB file -------------------------------------------------------
+# --- write three 1 MB files in ONE coalesced fan-out -------------------------
 rng = np.random.default_rng(0)
-doc = rng.integers(0, 256, 1 << 20, dtype=np.uint8).tobytes()
-stats = dss.net.run_op(writer.update("report.bin", doc), client="alice")
-print(f"write: {stats['blocks']} CDC blocks, all coded into n fragments "
-      f"(virtual latency baked into dss.net.now={dss.net.now*1e3:.1f} ms)")
+docs = {f"report{i}.bin": rng.integers(0, 256, 1 << 20, dtype=np.uint8).tobytes()
+        for i in range(3)}
+futs = [alice.write(fid, doc) for fid, doc in docs.items()]
+stats = gather(*futs)                       # drive the net; results in order
+st = futs[0].stats                          # uniform OpStats on every future
+print(f"write: {sum(s['blocks'] for s in stats)} CDC blocks across "
+      f"{len(docs)} files in {st.rounds} quorum rounds total "
+      f"(coalesced x{st.batched_with}; {st.bytes/1e6:.1f} MB on the wire)")
 
-# --- read it back -------------------------------------------------------------
-got = dss.net.run_op(reader.read("report.bin"), client="bob")
-assert got == doc
-print(f"read: OK ({len(got)>>20} MiB, decoded from k-of-n fragments)")
+# --- read them back ----------------------------------------------------------
+reads = [bob.read(fid) for fid in docs]
+assert gather(*reads) == list(docs.values())
+print(f"read: OK ({len(docs)} MiB-files, decoded from k-of-n fragments, "
+      f"{reads[0].stats.rounds} quorum rounds for the whole fan-out)")
 
 # --- incremental edit: only touched blocks rewrite ---------------------------
-edit = bytearray(doc)
+edit = bytearray(docs["report0.bin"])
 edit[500_000:500_016] = b"EDITED-IN-PLACE!"
-stats2 = dss.net.run_op(writer.update("report.bin", bytes(edit)), client="alice")
-print(f"edit: rewrote {stats2['written']}/{stats2['blocks']} blocks "
+st2 = alice.write("report0.bin", bytes(edit)).result()
+print(f"edit: rewrote {st2['written']}/{st2['blocks']} blocks "
       f"(rsync-style CDC — the paper's Fig.4 flat-write-latency effect)")
 
-# --- crash within the fault budget -------------------------------------------
+# --- reliability margin, before and after a crash ----------------------------
+print(f"stat: margin={alice.stat('report0.bin').result()['margin']} "
+      f"(fragment losses the weakest block still survives)")
 dss.crash_servers(["s7"])
-got2 = dss.net.run_op(reader.read("report.bin"), client="bob")
-assert got2 == bytes(edit)
-print("crash: s7 down, read still OK (EC quorum)")
+assert bob.read("report0.bin").result() == bytes(edit)
+print(f"crash: s7 down, read still OK (EC quorum), "
+      f"margin now {alice.stat('report0.bin').result()['margin']}")
 
-# --- live reconfiguration to a fresh server set + ABD DAP ---------------------
-g = dss.client("admin")
+# --- live reconfiguration to a fresh server set + ABD DAP --------------------
+admin = dss.session("admin")
 new_cfg = dss.make_config(dap="abd", n_servers=5, fresh_servers=True)
-nblocks = dss.net.run_op(g.recon("report.bin", new_cfg), client="admin")
+nblocks = admin.recon("report0.bin", new_cfg).result()
 print(f"recon: migrated {nblocks} blocks to 5 fresh servers under ABD "
       f"(service stayed readable throughout)")
-got3 = dss.net.run_op(reader.read("report.bin"), client="bob")
-assert got3 == bytes(edit)
+assert bob.read("report0.bin").result() == bytes(edit)
 print("read after recon: OK — done.")
+
+# --- legacy API (deprecated) -------------------------------------------------
+# The pre-Session surface still works — one generator op per call, threaded
+# through the sim runner by hand; kept as a shim for old call sites:
+#   writer = dss.client("alice")
+#   stats = dss.net.run_op(writer.update("report0.bin", doc), client="alice")
+# Prefer dss.session(...): it coalesces concurrent ops across files into
+# O(1)-round batches and returns futures carrying uniform OpStats.

@@ -1,61 +1,68 @@
-"""The paper's §VII-E headline scenario (Fig. 10): the storage service keeps
-serving concurrent readers/writers while a reconfigurer switches both the
-DAP (ABD <-> EC) and the server set, five times.
+"""The paper's §VII-E headline scenario (Fig. 10), on the Session API: the
+storage service keeps serving concurrent readers/writers while a
+reconfigurer switches both the DAP (ABD <-> EC) and the server set, five
+times. Scripted client loops ride ``Session.submit``; one-shot operations
+use the write/read/recon futures.
 
   PYTHONPATH=src python examples/reconfigure_live.py
 """
 import numpy as np
 
-from repro.core import DSS, DSSParams
+from repro.core import DSS, DSSParams, Workload
 
 dss = DSS(DSSParams(algorithm="coaresecf", n_servers=11, parity_m=5, seed=42,
-                    min_block=2048, avg_block=8192, max_block=32768))
+                    min_block=2048, avg_block=8192, max_block=32768,
+                    indexed=True))
 rng = np.random.default_rng(1)
 doc = rng.integers(0, 256, 256 * 1024, dtype=np.uint8).tobytes()
-boot = dss.client("boot")
-dss.net.run_op(boot.update("shared.bin", doc), client="boot")
+dss.session("boot").write("shared.bin", doc).result()
 
-writers = [dss.client(f"w{i}") for i in range(3)]
-readers = [dss.client(f"r{i}") for i in range(3)]
-admin = dss.client("admin")
-futs = []
+wl = Workload(dss)
 
-for wi, w in enumerate(writers):
-    def wloop(w=w, wi=wi):
+for wi in range(3):
+    def wloop(s=wl.session(f"w{wi}"), wi=wi):
+        # a scripted read-modify-write loop: drives the legacy generator
+        # ops of s.handle, submitted as ONE session op with OpStats.
         n_ok = 0
         for r in range(4):
-            cur = yield from w.read("shared.bin")
+            cur = yield from s.handle.read("shared.bin")
             buf = bytearray(cur)
             pos = (wi * 50_021 + r * 13_337) % max(1, len(buf))
             buf[pos] ^= 0xFF
-            st = yield from w.update("shared.bin", bytes(buf))
+            st = yield from s.handle.update("shared.bin", bytes(buf))
             n_ok += st["success"]
         return n_ok
-    futs.append(dss.net.spawn(wloop(), client=f"w{wi}", delay=0.002 * wi))
+    wl.submit(f"w{wi}", wloop(), kind="writer-loop")
 
-for ri, r in enumerate(readers):
-    def rloop(r=r):
+for ri in range(3):
+    def rloop(s=wl.session(f"r{ri}")):
         sizes = []
         for _ in range(5):
-            c = yield from r.read("shared.bin")
+            c = yield from s.handle.read("shared.bin")
             sizes.append(len(c))
         return sizes
-    futs.append(dss.net.spawn(rloop(), client=f"r{ri}", delay=0.0015 * ri))
+    wl.submit(f"r{ri}", rloop(), kind="reader-loop")
 
-def gloop():
+def gloop(s=wl.session("admin")):
     plans = [("abd", 7), ("ec_opt", 11), ("abd", 5), ("ec_opt", 9), ("ec_opt", 11)]
     for dap, n in plans:
         cfg = dss.make_config(dap=dap, n_servers=n)
-        yield from admin.recon("shared.bin", cfg)
+        yield from s.handle.recon("shared.bin", cfg)
     return len(plans)
+wl.submit("admin", gloop(), kind="recon-loop")
 
-futs.append(dss.net.spawn(gloop(), client="admin", delay=0.004))
-dss.net.run()
+results = wl.run()                # drives everything concurrently
+writes_ok = sum(results[:3])
+reads = sum(len(r) for r in results[3:6])
+recons = results[-1]
+admin_stats = wl.futures[-1].stats
 
-assert all(f.done for f in futs), "an operation failed to terminate"
-recons = futs[-1].result
-writes_ok = sum(f.result for f in futs[:3])
-final = dss.net.run_op(dss.client("final").read("shared.bin"), client="final")
-print(f"service uninterrupted: {recons} recons (ABD<->EC, 5-11 servers), "
-      f"{writes_ok}/12 writes prevailed, {sum(len(f.result) for f in futs[3:6])} reads OK, "
-      f"final file {len(final)>>10} KiB, virtual time {dss.net.now*1e3:.0f} ms")
+final = dss.session("final").read("shared.bin")
+print(f"service uninterrupted: {recons} recons (ABD<->EC, 5-11 servers, "
+      f"{admin_stats.rounds} quorum rounds), {writes_ok}/12 writes prevailed, "
+      f"{reads} reads OK, final file {len(final.result())>>10} KiB, "
+      f"virtual time {dss.net.now*1e3:.0f} ms")
+
+# legacy equivalent (deprecated): spawn each loop yourself and poll futures —
+#   fut = dss.net.spawn(wloop(), client="w0"); dss.net.run(); fut.result
+# the Workload/gather combinator above replaces that boilerplate.

@@ -1,5 +1,7 @@
 """The paper's contribution: CoARES, CoARESF, EC-DAP/EC-DAPopt (+ checkers),
-plus the beyond-paper self-healing repair subsystem (``repro.core.repair``)."""
+plus the beyond-paper self-healing repair subsystem (``repro.core.repair``)
+and the Session/future client API (``repro.core.api``)."""
+from repro.core.api import OpStats, Session, Workload, gather
 from repro.core.coares import CoAresClient, StaticCoverableClient
 from repro.core.fragment import (
     FragmentationModule,
@@ -9,14 +11,20 @@ from repro.core.fragment import (
     genesis_id,
     parse_genesis_meta,
 )
-from repro.core.repair import RepairController, RepairDaemon
+from repro.core.repair import ObjectHealth, RepairController, RepairDaemon, probe_health
 from repro.core.server import StorageServer
 from repro.core.store import ALGORITHMS, DSS, ClientHandle, DSSParams
 from repro.core.tags import TAG0, Config, CSeqEntry, OpRecord, Tag, next_tag
 
 __all__ = [
+    "Session",
+    "Workload",
+    "OpStats",
+    "gather",
     "CoAresClient",
     "StaticCoverableClient",
+    "ObjectHealth",
+    "probe_health",
     "FragmentationModule",
     "RepairController",
     "RepairDaemon",

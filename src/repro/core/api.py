@@ -1,0 +1,320 @@
+"""Session/future client API with cross-file batched scheduling (ISSUE 3).
+
+The public surface used to be "build a generator op, thread it through
+``dss.net.run_op``, scrape whatever dict it returns". That drives ONE
+operation at a time, so the PR-2 state-transfer engine — which batches all
+blocks of one file into single quorum rounds — still pays O(F) quorum
+rounds when a workload touches F files. This module replaces that surface:
+
+* :class:`Session` — the per-client handle. ``submit(op)`` runs any raw
+  generator op; ``write``/``read``/``recon``/``stat`` are the conveniences.
+  Every call returns immediately with an :class:`OpFuture`.
+* **Cross-file aggregation**: convenience ops do NOT dispatch one generator
+  each. They queue as intents, and a per-session scheduler drains the queue
+  after ``window`` virtual seconds: consecutive same-kind intents coalesce
+  into ONE multi-file batch op (``ClientHandle.read_batch`` etc.), which
+  rides the engine's multi-object RPCs. Config discovery, max-tag gathers
+  and put-until-stable rounds for different FILES thus share the same
+  ``read-next-batch``/``ec-query-batch``/``ec-put-batch`` fan-outs — an
+  F-file fan-out completes in O(1) quorum rounds instead of O(F)
+  (``benchmarks/bench_multifile.py`` measures exactly this).
+* :class:`OpStats` — every future carries uniform stats (quorum rounds,
+  messages, bytes, virtual-time latency, blocks) measured from the
+  network's per-client counters, so benchmarks and tests stop scraping
+  heterogeneous result dicts. Coalesced ops share their batch's totals
+  (``batched_with`` says how many rode along).
+* :class:`Workload` / :func:`gather` — run any mix of operations from any
+  number of clients concurrently on the virtual-time network and collect
+  results in submission order.
+
+The old surface (``dss.client(cid)`` + ``dss.net.run_op``) keeps working as
+a deprecation shim — the Session drives those same ``ClientHandle``
+generator ops underneath — but new code and the examples use this API.
+
+Program order note: intents of ONE session coalesce only within a same-kind
+run, so ``write(f); read(f)`` from the same session still executes the
+write group before the read group. Ops from different sessions are
+concurrent, exactly like the paper's independent clients.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Generator
+
+from repro.core.tags import Config
+
+
+@dataclass
+class OpStats:
+    """Uniform per-operation accounting (ISSUE 3).
+
+    ``rounds``/``msgs``/``bytes`` come from the network's per-client
+    counters — under a coalesced batch they are the BATCH's totals, shared
+    by all ``batched_with`` riders (charging each rider the full fan-out
+    would multi-count shared rounds; dividing would hide them). The same
+    interval semantics apply to any ops of ONE client that overlap in
+    virtual time (e.g. two concurrent ``submit`` loops): each op's stats
+    include the client's traffic during its lifetime, so summing stats
+    across overlapping same-client futures over-counts — sum
+    ``Network.client_totals`` deltas instead for whole-workload totals."""
+
+    rounds: int = 0
+    msgs: int = 0
+    bytes: int = 0
+    latency: float = 0.0
+    blocks: int = 0
+    batched_with: int = 1
+
+
+class OpFuture:
+    """Handle to an in-flight Session operation (concurrent.futures style:
+    ``done()`` / ``result()``; ``result`` drives the event loop only as far
+    as needed, so background daemons never block completion)."""
+
+    def __init__(self, session: "Session", kind: str, fid: str | None):
+        self.session = session
+        self.kind = kind
+        self.fid = fid
+        self.client = session.cid
+        self.stats: OpStats | None = None
+        self._done = False
+        self._result: Any = None
+        self._error: BaseException | None = None
+
+    # backstop against spinning forever when the op can never complete but
+    # background traffic (an unbounded repair daemon) keeps the event queue
+    # non-empty — same budget as ``Network.run``.
+    MAX_EVENTS = 50_000_000
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self) -> Any:
+        """Step the virtual-time network until this operation completes,
+        then return its result (or raise what the operation raised)."""
+        net = self.session.net
+        budget = self.MAX_EVENTS
+        while not self._done and net.step():
+            budget -= 1
+            if budget <= 0:
+                break
+        if not self._done:
+            raise RuntimeError(
+                f"{self.kind}({self.fid!r}) did not terminate "
+                "(quorum lost, or only background traffic remains?)"
+            )
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def _resolve(self, result: Any, stats: OpStats) -> None:
+        self._result = result
+        self.stats = stats
+        self._done = True
+
+    def _fail(self, err: BaseException, stats: OpStats | None = None) -> None:
+        self._error = err
+        self.stats = stats
+        self._done = True
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        state = "done" if self._done else "pending"
+        return f"OpFuture({self.kind}, {self.fid!r}, {state})"
+
+
+@dataclass
+class _Intent:
+    kind: str
+    fid: str | None
+    arg: Any
+    fut: OpFuture
+
+
+class Session:
+    """Per-client handle of the submit/future API.
+
+    ``window`` is the virtual-time coalescing window: convenience ops
+    submitted within one window drain together and same-kind runs ride one
+    multi-file batch. The default (0.5 ms virtual) sits under the sim's base
+    RTT, so batching never costs a visible latency hit; ``window=0.0``
+    still coalesces ops submitted back-to-back from ordinary Python code
+    (virtual time only advances inside ``net.run``/``step``)."""
+
+    def __init__(self, dss, cid: str, *, window: float = 0.5e-3):
+        self.dss = dss
+        self.cid = cid
+        self.net = dss.net
+        self.handle = dss.client(cid)
+        self.window = window
+        self._pending: list[_Intent] = []
+        self._drain_scheduled = False
+
+    # ------------------------------------------------------------- raw ops
+    def submit(self, op: Generator, *, kind: str = "op",
+               fid: str | None = None) -> OpFuture:
+        """Run an arbitrary generator op (e.g. a scripted loop driving
+        ``self.handle``) under this session; returns its OpFuture. Raw
+        submissions are NOT coalesced — they run as their own op."""
+        fut = OpFuture(self, kind, fid)
+        self.net.spawn(
+            self._instrumented(op, fut, None), kind=kind, client=self.cid
+        )
+        return fut
+
+    def _instrumented(self, op: Generator, fut: OpFuture,
+                      blocks: int | None) -> Generator:
+        r0, m0, b0 = self.net.client_totals(self.cid)
+        t0 = self.net.now
+        try:
+            res = yield from op
+        except Exception as err:  # noqa: BLE001 - delivered via the future
+            fut._fail(err, self._delta(r0, m0, b0, t0, 0, 1))
+            return None
+        fut._resolve(res, self._delta(r0, m0, b0, t0, blocks or 0, 1))
+        return res
+
+    def _delta(self, r0, m0, b0, t0, blocks, width) -> OpStats:
+        r1, m1, b1 = self.net.client_totals(self.cid)
+        return OpStats(rounds=r1 - r0, msgs=m1 - m0, bytes=b1 - b0,
+                       latency=self.net.now - t0, blocks=blocks,
+                       batched_with=width)
+
+    # ------------------------------------------------------- convenience ops
+    def write(self, fid: str, content: bytes) -> OpFuture:
+        return self._enqueue("write", fid, content)
+
+    def read(self, fid: str) -> OpFuture:
+        return self._enqueue("read", fid, None)
+
+    def recon(self, fid: str, new_config: Config) -> OpFuture:
+        return self._enqueue("recon", fid, new_config)
+
+    def stat(self, fid: str) -> OpFuture:
+        """Per-object reliability: resolves to a dict with the surviving-
+        fragment ``margin`` of the file's weakest block (see
+        ``ClientHandle.stat_batch``)."""
+        return self._enqueue("stat", fid, None)
+
+    def _enqueue(self, kind: str, fid: str, arg: Any) -> OpFuture:
+        fut = OpFuture(self, kind, fid)
+        self._pending.append(_Intent(kind, fid, arg, fut))
+        if not self._drain_scheduled:
+            self._drain_scheduled = True
+            self.net.spawn(
+                self._drain(), kind="session-drain", client=self.cid,
+                delay=self.window,
+            )
+        return fut
+
+    # ---------------------------------------------------------- the scheduler
+    def _groups(self, batch: list[_Intent]) -> list[list[_Intent]]:
+        """Maximal runs of consecutive same-kind intents — program order is
+        preserved across kind changes. A run also breaks on a repeated fid
+        (two writes to one file must stay two operations) and, for recons,
+        on a different target configuration."""
+        groups: list[list[_Intent]] = []
+        for it in batch:
+            g = groups[-1] if groups else None
+            if (
+                g is None
+                or g[0].kind != it.kind
+                or any(prev.fid == it.fid for prev in g)
+                or (it.kind == "recon" and g[0].arg.cfg_id != it.arg.cfg_id)
+            ):
+                groups.append([it])
+            else:
+                g.append(it)
+        return groups
+
+    def _drain(self) -> Generator:
+        self._drain_scheduled = False
+        batch, self._pending = self._pending, []
+        for group in self._groups(batch):
+            kind = group[0].kind
+            fids = [it.fid for it in group]
+            r0, m0, b0 = self.net.client_totals(self.cid)
+            t0 = self.net.now
+            try:
+                if kind == "read":
+                    res = yield from self.handle.read_batch(fids)
+                    payload = {f: content for f, (content, _n) in res.items()}
+                    blocks = {f: n for f, (_c, n) in res.items()}
+                elif kind == "write":
+                    res = yield from self.handle.update_batch(
+                        {it.fid: it.arg for it in group}
+                    )
+                    payload = res
+                    blocks = {f: s["blocks"] for f, s in res.items()}
+                elif kind == "recon":
+                    res = yield from self.handle.recon_batch(fids, group[0].arg)
+                    payload = res
+                    blocks = res
+                else:  # stat
+                    res = yield from self.handle.stat_batch(fids)
+                    payload = res
+                    blocks = {f: s["blocks"] for f, s in res.items()}
+            except Exception as err:  # noqa: BLE001 - delivered via futures
+                stats = self._delta(r0, m0, b0, t0, 0, len(group))
+                for it in group:
+                    it.fut._fail(err, stats)
+                continue
+            for it in group:
+                it.fut._resolve(
+                    payload[it.fid],
+                    self._delta(r0, m0, b0, t0, blocks[it.fid], len(group)),
+                )
+        return None
+
+
+def gather(*futures: OpFuture) -> list:
+    """Drive the (shared) virtual-time network until every future completes;
+    returns their results in argument order. Raises the first failure."""
+    return [f.result() for f in futures]
+
+
+class Workload:
+    """Combinator for a mixed multi-client operation fan-out: one Session
+    per client id (lazily created, all on the store's network), every
+    convenience call recorded, ``run()`` == ``gather`` over everything
+    submitted so far.
+
+        wl = Workload(dss)
+        for i, fid in enumerate(files):
+            wl.write(f"w{i % 3}", fid, payloads[fid])
+        results = wl.run()          # one O(1)-round fan-out per client
+    """
+
+    def __init__(self, dss, *, window: float = 0.5e-3):
+        self.dss = dss
+        self.window = window
+        self._sessions: dict[str, Session] = {}
+        self.futures: list[OpFuture] = []
+
+    def session(self, cid: str) -> Session:
+        s = self._sessions.get(cid)
+        if s is None:
+            s = self._sessions[cid] = Session(self.dss, cid, window=self.window)
+        return s
+
+    def _track(self, fut: OpFuture) -> OpFuture:
+        self.futures.append(fut)
+        return fut
+
+    def write(self, cid: str, fid: str, content: bytes) -> OpFuture:
+        return self._track(self.session(cid).write(fid, content))
+
+    def read(self, cid: str, fid: str) -> OpFuture:
+        return self._track(self.session(cid).read(fid))
+
+    def recon(self, cid: str, fid: str, new_config: Config) -> OpFuture:
+        return self._track(self.session(cid).recon(fid, new_config))
+
+    def stat(self, cid: str, fid: str) -> OpFuture:
+        return self._track(self.session(cid).stat(fid))
+
+    def submit(self, cid: str, op: Generator, **kw) -> OpFuture:
+        return self._track(self.session(cid).submit(op, **kw))
+
+    def run(self) -> list:
+        """Complete every tracked future; results in submission order."""
+        return gather(*self.futures)

@@ -96,6 +96,7 @@ class CoAresClient:
         *,
         repair_on_recon: bool = True,
         recon_repair_delay: float = 0.0,
+        on_recon=None,
     ):
         self.net = net
         self.client_id = client_id
@@ -108,6 +109,10 @@ class CoAresClient:
         # configuration (after ``recon_repair_delay`` virtual seconds).
         self.repair_on_recon = repair_on_recon
         self.recon_repair_delay = recon_repair_delay
+        # recon-finalization callback ``(config, cfg_idx, objs) -> None``:
+        # lets observers (the auto-retargeting RepairDaemon, via the DSS
+        # notifier) follow reconfigurations without polling the history log.
+        self.on_recon = on_recon
 
     # ------------------------------------------------------------- plumbing
     def _cseq(self, obj: str) -> list[CSeqEntry]:
@@ -365,6 +370,9 @@ class CoAresClient:
             if self.repair_on_recon:
                 for group in by_cfg.values():
                     self._spawn_repair(decided[group[0]], nu + 1, group)
+            if self.on_recon is not None:
+                for group in by_cfg.values():
+                    self.on_recon(decided[group[0]], nu + 1, tuple(group))
         return out
 
     def recon(self, obj: str, new_config: Config) -> Generator:

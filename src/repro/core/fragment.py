@@ -34,11 +34,11 @@ from __future__ import annotations
 import hashlib
 import pickle
 from difflib import SequenceMatcher
-from typing import Any, Generator
+from typing import Generator
 
 from repro.core.tags import Config, OpRecord
 from repro.kernels.cdc_gearhash.ops import split_chunks
-from repro.net.sim import Sleep
+from repro.net.sim import Join, Sleep
 
 SEP = "\x01"
 
@@ -155,7 +155,6 @@ class FragmentationModule:
                 self.dsm.version[bid] = tag
                 out.append((bid, raw))
             return out
-        from repro.net.sim import Join
 
         results = yield Join([self._read_block_op(b) for b in bids])
         out = []
@@ -164,10 +163,25 @@ class FragmentationModule:
             out.append((bid, braw))
         return out
 
-    def _read_chain(self, fid: str) -> Generator:
-        """Returns [(bid, ptr, data)] — one genesis read + ALL block reads in
-        one batched round (indexed mode with an index present), else the
-        linked-list walk."""
+    def _walk_chain(self, ptr: str | None) -> Generator:
+        """The linked-list walk from a head pointer (non-indexed mode, or a
+        legacy count-only genesis). Returns ``[(bid, ptr, data)]``."""
+        blocks: list[tuple[str, str | None, bytes]] = []
+        seen: set[str] = set()
+        while ptr is not None and ptr not in seen:
+            seen.add(ptr)
+            tag, raw = yield from self.dsm.cvr_read(ptr)
+            self.dsm.version[ptr] = tag
+            nxt, data = decode_block_value(raw)
+            blocks.append((ptr, nxt, data))
+            ptr = nxt
+        return blocks
+
+    def _read_chain_ex(self, fid: str) -> Generator:
+        """``(blocks, had_index)`` — one genesis read + ALL block reads in one
+        batched round (indexed mode with an index present), else the walk.
+        ``had_index`` tells update paths whether the genesis must be upgraded
+        to the indexed schema even when the block list is unchanged."""
         g = genesis_id(fid)
         tag, raw = yield from self.dsm.cvr_read(g)
         self.dsm.version[g] = tag
@@ -179,18 +193,51 @@ class FragmentationModule:
             for bid, braw in results:
                 nxt, data = decode_block_value(braw)
                 blocks.append((bid, nxt, data))
-            return blocks
-        # linked-list walk: non-indexed mode, or a legacy count-only genesis
-        blocks: list[tuple[str, str | None, bytes]] = []
-        seen = set()
-        while ptr is not None and ptr not in seen:
-            seen.add(ptr)
-            tag, raw = yield from self.dsm.cvr_read(ptr)
-            self.dsm.version[ptr] = tag
-            nxt, data = decode_block_value(raw)
-            blocks.append((ptr, nxt, data))
-            ptr = nxt
+            return blocks, True
+        blocks = yield from self._walk_chain(ptr)
+        return blocks, index is not None
+
+    def _read_chain(self, fid: str) -> Generator:
+        """Returns [(bid, ptr, data)]; see ``_read_chain_ex``."""
+        blocks, _had_index = yield from self._read_chain_ex(fid)
         return blocks
+
+    def _read_chain_batch(self, fids: list[str]) -> Generator:
+        """Cross-FILE aggregation of ``_read_chain`` (ISSUE 3): ONE batched
+        engine pass for every file's genesis block, then ONE batched pass for
+        ALL data blocks of every indexed file — an F-file read costs the same
+        quorum rounds as a one-file read. Files whose genesis carries no
+        index (legacy schema) fall back to the per-file linked-list walk.
+        Returns ``({fid: [(bid, ptr, data)]}, {fid: had_index})``."""
+        gids = {fid: genesis_id(fid) for fid in fids}
+        gres = yield from self.dsm.cvr_read_batch([gids[f] for f in fids])
+        index_of: dict[str, list[str]] = {}
+        heads: dict[str, str | None] = {}
+        all_blocks: list[str] = []
+        for fid in fids:
+            tag, raw = gres[gids[fid]]
+            self.dsm.version[gids[fid]] = tag
+            ptr, meta = decode_block_value(raw)
+            index = parse_genesis_meta(meta)
+            if index is not None:
+                index_of[fid] = index
+                all_blocks.extend(index)
+            else:
+                heads[fid] = ptr
+        chains: dict[str, list[tuple[str, str | None, bytes]]] = {}
+        if all_blocks:
+            res = yield from self.dsm.cvr_read_batch(all_blocks)
+            for fid, index in index_of.items():
+                blocks = []
+                for bid in index:
+                    tag, raw = res[bid]
+                    self.dsm.version[bid] = tag
+                    nxt, data = decode_block_value(raw)
+                    blocks.append((bid, nxt, data))
+                chains[fid] = blocks
+        for fid, ptr in heads.items():
+            chains[fid] = yield from self._walk_chain(ptr)
+        return chains, {fid: fid in index_of for fid in fids}
 
     def fm_read(self, fid: str) -> Generator:
         t0 = self.net.now
@@ -205,13 +252,44 @@ class FragmentationModule:
         )
         return content, blocks
 
-    # --------------------------------------------------------------- update
-    def fm_update(self, fid: str, content: bytes) -> Generator:
-        """BI + block updates. Returns stats dict (written/collided/...)."""
+    def fm_read_batch(self, fids) -> Generator:
+        """Read many FILES in one batched pass (ISSUE 3): with the indexed
+        batched FM every file's blocks ride the same two engine passes
+        (genesis round + block round), so the quorum-round count is flat in
+        the number of files. Without index/batching this degrades gracefully
+        to a ``Join`` of independent per-file reads (the ablation baseline).
+        Returns ``{fid: (content, blocks)}``."""
+        fids = list(dict.fromkeys(fids))
+        if not fids:
+            return {}
+        if not (self.indexed and self.batched):
+            results = yield Join([self.fm_read(f) for f in fids])
+            return dict(zip(fids, results))
         t0 = self.net.now
-        old_blocks = yield from self._read_chain(fid)
-        # --- Block Division (kernel CDC) + Matching (Ratcliff [9]) ---------
-        yield Sleep(self.net.latency.bi_per_byte * (len(content) + 1))
+        chains, _had_index = yield from self._read_chain_batch(fids)
+        out: dict[str, tuple[bytes, list]] = {}
+        for fid in fids:
+            blocks = chains[fid]
+            content = b"".join(d for _, _, d in blocks)
+            self.history.append(
+                OpRecord(
+                    kind="fm-read", obj=fid, client=self.dsm.client_id,
+                    start=t0, end=self.net.now,
+                    extra={"n_blocks": len(blocks), "size": len(content),
+                           "coalesced": len(fids)},
+                )
+            )
+            out[fid] = (content, blocks)
+        return out
+
+    # --------------------------------------------------------------- update
+    def _plan_blocks(
+        self, fid: str, old_blocks: list, content: bytes
+    ) -> tuple[list[tuple[str, bytes]], list[bytes]]:
+        """Block Division (kernel CDC) + Matching (Ratcliff [9]) + new-block
+        id assignment: the target block list ``[(bid, data)]`` for an update.
+        Pure computation — shared by ``fm_update`` and ``fm_update_batch``;
+        the caller charges the BI latency (``bi_per_byte``)."""
         live = [(bid, data) for bid, _, data in old_blocks if data != b""]
         chunks = split_chunks(
             content, min_size=self.min_block, avg_size=self.avg_block,
@@ -259,6 +337,21 @@ class FragmentationModule:
         final: list[tuple[str, bytes]] = []
         for bid, data in target:
             final.append((bid if bid is not None else self._new_block_id(fid), data))
+        return final, chunks
+
+    def fm_update(self, fid: str, content: bytes) -> Generator:
+        """BI + block updates. Returns stats dict (written/collided/...).
+
+        The indexed+batched path IS ``fm_update_batch`` with one file —
+        one code path for the changed-block diff, flag accounting and the
+        legacy-genesis upgrade rule, single-file or coalesced."""
+        if self.indexed and self.batched:
+            res = yield from self.fm_update_batch({fid: content})
+            return res[fid]
+        t0 = self.net.now
+        old_blocks, had_index = yield from self._read_chain_ex(fid)
+        yield Sleep(self.net.latency.bi_per_byte * (len(content) + 1))
+        final, chunks = self._plan_blocks(fid, old_blocks, content)
         # --- diff against old state; write the changed blocks ---------------
         old_state = {bid: (nxt, data) for bid, nxt, data in old_blocks}
         stats = {"written": 0, "collided": 0, "created": 0, "blocks": len(final),
@@ -267,27 +360,22 @@ class FragmentationModule:
         new_index = [bid for bid, _ in final]
         old_index = [bid for bid, _n, _d in old_blocks]
         if self.indexed:
+            # per-block Join ablation (``batched=False``): same diff and
+            # genesis-upgrade rules as fm_update_batch, concurrent quorum
+            # ops instead of one batched fan-out
             old_data = {bid: data for bid, _n, data in old_blocks}
             writes = [
                 (bid, encode_block_value(None, data))
                 for bid, data in final
                 if bid not in old_data or old_data[bid] != data
             ]
-            if self.batched:
-                # one batched coverable write: single quorum fan-out, whole
-                # update encoded by one fused GF(256) matmul inside the DAP
-                results = yield from self.dsm.cvr_write_batch(dict(writes))
-                items = results.items()
-            else:
-                from repro.net.sim import Join
+            self._precode(writes)
 
-                self._precode(writes)
+            def write_op(bid, raw):
+                res = yield from self.dsm.cvr_write(bid, raw)
+                return bid, res
 
-                def write_op(bid, raw):
-                    res = yield from self.dsm.cvr_write(bid, raw)
-                    return bid, res
-
-                items = yield Join([write_op(b, r) for b, r in writes])
+            items = yield Join([write_op(b, r) for b, r in writes])
             for bid, ((tag, _v), flag) in items:
                 self.dsm.version[bid] = tag
                 if flag == "chg":
@@ -295,7 +383,11 @@ class FragmentationModule:
                     stats["created"] += int(bid not in old_state)
                 else:
                     stats["collided"] += 1
-            if new_index != old_index:
+            # A legacy count-only genesis MUST be upgraded to the indexed
+            # schema even when the block list is unchanged: the data blocks
+            # above were written with ptr=None, so without an index the
+            # linked-list walk would be severed (silent truncation).
+            if new_index != old_index or not had_index:
                 head = final[0][0] if final else None
                 (tag, _v), flag = yield from self.dsm.cvr_write(
                     g, encode_block_value(head, encode_genesis_meta(new_index))
@@ -344,7 +436,104 @@ class FragmentationModule:
         )
         return stats
 
+    def fm_update_batch(self, updates: dict) -> Generator:
+        """Update many FILES in one batched pass (ISSUE 3): read every file's
+        chain (two batched engine passes via ``_read_chain_batch``), run BI
+        per file, then write ALL changed data blocks of ALL files in ONE
+        batched coverable write — one fused GF(256) encode for the whole
+        fan-out — followed by one batched write of every changed genesis
+        block (data before genesis keeps Lemma 13's connectivity argument:
+        a head flip is the last thing a reader can observe). Files fall back
+        to a ``Join`` of per-file updates when the indexed batched path is
+        off. Returns ``{fid: stats}``."""
+        fids = list(dict.fromkeys(updates))
+        if not fids:
+            return {}
+        if not (self.indexed and self.batched):
+            results = yield Join([self.fm_update(f, updates[f]) for f in fids])
+            return dict(zip(fids, results))
+        t0 = self.net.now
+        chains, had_index = yield from self._read_chain_batch(fids)
+        yield Sleep(
+            self.net.latency.bi_per_byte
+            * (sum(len(updates[f]) for f in fids) + len(fids))
+        )
+        all_writes: dict[str, bytes] = {}
+        writes_of: dict[str, list[str]] = {}
+        genesis_writes: dict[str, bytes] = {}
+        g_of: dict[str, str] = {}
+        stats_of: dict[str, dict] = {}
+        old_state_of: dict[str, dict] = {}
+        for fid in fids:
+            old_blocks = chains[fid]
+            final, chunks = self._plan_blocks(fid, old_blocks, updates[fid])
+            old_state_of[fid] = {bid: (nxt, data) for bid, nxt, data in old_blocks}
+            stats_of[fid] = {"written": 0, "collided": 0, "created": 0,
+                             "blocks": len(final), "chunks": len(chunks)}
+            old_data = {bid: data for bid, _n, data in old_blocks}
+            writes_of[fid] = []
+            for bid, data in final:
+                if bid not in old_data or old_data[bid] != data:
+                    all_writes[bid] = encode_block_value(None, data)
+                    writes_of[fid].append(bid)
+            new_index = [bid for bid, _ in final]
+            # rewrite the genesis when the index changed — or when it held
+            # the legacy count-only schema (the blocks above were written
+            # with ptr=None; without an index the walk would sever).
+            if new_index != [bid for bid, _n, _d in old_blocks] or not had_index[fid]:
+                head = final[0][0] if final else None
+                g = genesis_id(fid)
+                g_of[fid] = g
+                genesis_writes[g] = encode_block_value(
+                    head, encode_genesis_meta(new_index)
+                )
+        results = yield from self.dsm.cvr_write_batch(all_writes)
+        for fid in fids:
+            for bid in writes_of[fid]:
+                (tag, _v), flag = results[bid]
+                self.dsm.version[bid] = tag
+                if flag == "chg":
+                    stats_of[fid]["written"] += 1
+                    stats_of[fid]["created"] += int(bid not in old_state_of[fid])
+                else:
+                    stats_of[fid]["collided"] += 1
+        gresults = yield from self.dsm.cvr_write_batch(genesis_writes)
+        for fid, g in g_of.items():
+            (tag, _v), flag = gresults[g]
+            self.dsm.version[g] = tag
+            if flag == "chg":
+                stats_of[fid]["written"] += 1
+            else:
+                stats_of[fid]["collided"] += 1
+        for fid in fids:
+            stats = stats_of[fid]
+            stats["success"] = stats["collided"] == 0
+            self.history.append(
+                OpRecord(
+                    kind="fm-update", obj=fid, client=self.dsm.client_id,
+                    start=t0, end=self.net.now,
+                    flag="chg" if stats["success"] else "unchg",
+                    extra={**stats, "coalesced": len(fids)},
+                )
+            )
+        return stats_of
+
     # --------------------------------------------------------------- recon
+    def _recon_walk(self, ptr: str | None, new_config: Config) -> Generator:
+        """Legacy count-only genesis: reconfigure block by block along the
+        chain, reusing the (tag, value) each recon already transferred
+        instead of re-reading every block. Returns #blocks moved."""
+        n = 0
+        seen: set[str] = set()
+        while ptr is not None and ptr not in seen:
+            seen.add(ptr)
+            bres = yield from self.dsm.recon_batch((ptr,), new_config)
+            _bcfg, btag, braw = bres[ptr]
+            self.dsm.version[ptr] = btag
+            ptr, _ = decode_block_value(braw)
+            n += 1
+        return n
+
     def fm_reconfig(self, fid: str, new_config: Config) -> Generator:
         """Alg 3: issue dsmm-reconfig (Alg 2) on every block, genesis
         included. With an index present all data blocks ride ONE batched
@@ -363,7 +552,6 @@ class FragmentationModule:
             if self.batched:
                 yield from self.dsm.recon_batch(index, new_config)
             else:
-                from repro.net.sim import Join
 
                 def recon_op(bid):
                     yield from self.dsm.recon(bid, new_config)
@@ -372,15 +560,7 @@ class FragmentationModule:
                 yield Join([recon_op(b) for b in index])
             n = 1 + len(index)
         else:
-            n = 1
-            seen = set()
-            while ptr is not None and ptr not in seen:
-                seen.add(ptr)
-                bres = yield from self.dsm.recon_batch((ptr,), new_config)
-                _bcfg, btag, braw = bres[ptr]
-                self.dsm.version[ptr] = btag
-                ptr, _ = decode_block_value(braw)
-                n += 1
+            n = 1 + (yield from self._recon_walk(ptr, new_config))
         self.history.append(
             OpRecord(
                 kind="fm-recon", obj=fid, client=self.dsm.client_id,
@@ -389,3 +569,50 @@ class FragmentationModule:
             )
         )
         return n
+
+    def fm_reconfig_batch(self, fids, new_config: Config) -> Generator:
+        """Reconfigure many FILES to one target configuration in one batched
+        pass (ISSUE 3): every file's genesis rides ONE batched recon (batched
+        consensus + one batched state transfer), then ALL indexed data blocks
+        of ALL files ride a second one — O(1) quorum rounds however many
+        files move. Legacy count-only genesis files fall back to the per-file
+        walk; ``batched=False`` degrades to a ``Join`` of per-file recons.
+        Returns ``{fid: n_blocks_moved}``."""
+        fids = list(dict.fromkeys(fids))
+        if not fids:
+            return {}
+        if not self.batched:
+            results = yield Join([self.fm_reconfig(f, new_config) for f in fids])
+            return dict(zip(fids, results))
+        t0 = self.net.now
+        gids = {fid: genesis_id(fid) for fid in fids}
+        res = yield from self.dsm.recon_batch(
+            [gids[f] for f in fids], new_config
+        )
+        all_blocks: list[str] = []
+        nblocks: dict[str, int] = {}
+        walk_heads: dict[str, str | None] = {}
+        for fid in fids:
+            _cfg, gtag, graw = res[gids[fid]]
+            self.dsm.version[gids[fid]] = gtag
+            ptr, meta = decode_block_value(graw)
+            index = parse_genesis_meta(meta)
+            if index is not None:
+                all_blocks.extend(index)
+                nblocks[fid] = 1 + len(index)
+            else:
+                walk_heads[fid] = ptr
+        if all_blocks:
+            yield from self.dsm.recon_batch(all_blocks, new_config)
+        for fid, ptr in walk_heads.items():
+            nblocks[fid] = 1 + (yield from self._recon_walk(ptr, new_config))
+        for fid in fids:
+            self.history.append(
+                OpRecord(
+                    kind="fm-recon", obj=fid, client=self.dsm.client_id,
+                    start=t0, end=self.net.now,
+                    extra={"n_blocks": nblocks[fid], "config": new_config.cfg_id,
+                           "coalesced": len(fids)},
+                )
+            )
+        return nblocks

@@ -37,6 +37,7 @@ case the trim quietly drops it again — wasted work, never lost safety.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Any, Generator
 
 import numpy as np
@@ -44,6 +45,99 @@ import numpy as np
 from repro.core.tags import TAG0, Config, OpRecord, Tag
 from repro.erasure.rs import RSCode
 from repro.net.sim import Join, RPC, Sleep
+
+
+@dataclass
+class ObjectHealth:
+    """Surviving-fragment margin of one object at one configuration (D-Rex's
+    reliability signal, ISSUE 3): how many more server losses the newest
+    written version survives before it becomes undecodable/unreadable.
+
+    ``margin = holders - k`` for EC configurations (holders = live servers
+    whose List still carries a coded element at the newest decodable tag),
+    ``holders - 1`` for ABD (live replicas storing the max tag). Data that
+    WAS written but no longer reaches k live holders reports a NEGATIVE
+    margin with ``unreadable=True`` (repair cannot rebuild it from this
+    configuration, so ``needs_repair`` stays False — but it must never be
+    confused with a healthy object). Only when nothing real was ever stored
+    (``tag == TAG0``, no real tag seen anywhere) does the object report
+    full margin. ``superseded`` means a quorum already finalized a successor
+    configuration at this index — the state here is historical and repair
+    effort belongs to the successor."""
+
+    obj: str
+    tag: Tag
+    holders: int      # live servers holding the newest version
+    alive: int        # live servers that answered the probe
+    margin: int
+    needs_repair: bool
+    unreadable: bool = False
+    superseded: bool = False
+
+
+def probe_health(config: Config, cfg_idx: int, objs) -> Generator:
+    """ONE tag-only ``margin-batch`` fan-out over the configuration's live
+    servers; returns ``{obj: ObjectHealth}``. No values or coded elements
+    move, so probing a whole store costs a few KB — cheap enough to run
+    every daemon cycle (and per ``Session.stat`` call)."""
+    objs = list(dict.fromkeys(objs))
+    out: dict[str, ObjectHealth] = {}
+    if not objs:
+        return out
+    ec = config.dap in ("ec", "ec_opt")
+    k = config.k if ec else 1
+    replies = yield RPC(
+        dests=config.servers,
+        msg=("margin-batch", tuple(objs), cfg_idx),
+        need="alive",
+    )
+    alive = len(replies)
+    for pos, obj in enumerate(objs):
+        counts: dict[Tag, int] = {}
+        seen: set[Tag] = set()
+        superseded = False
+        for _sid, (_kindtok, items) in replies.items():
+            abd_tag, ec_items, next_status = items[pos]
+            if next_status == "F":
+                superseded = True
+            if ec:
+                for t, holds in ec_items or ():
+                    if t > TAG0:
+                        seen.add(t)
+                    if holds:
+                        counts[t] = counts.get(t, 0) + 1
+            elif abd_tag is not None:
+                if abd_tag > TAG0:
+                    seen.add(abd_tag)
+                counts[abd_tag] = counts.get(abd_tag, 0) + 1
+        decodable = [t for t, c in counts.items() if c >= k and t > TAG0]
+        if decodable:
+            t_star = max(decodable)
+            holders = counts[t_star]
+            health = ObjectHealth(
+                obj=obj, tag=t_star, holders=holders, alive=alive,
+                margin=holders - k, needs_repair=holders < alive,
+                superseded=superseded,
+            )
+        elif seen:
+            # data WAS written here but fewer than k live holders remain:
+            # unreadable from this configuration, margin is negative, and
+            # repair cannot rebuild it — never report it healthy.
+            best = max(
+                ((counts.get(t, 0), t) for t in seen), default=(0, TAG0)
+            )
+            health = ObjectHealth(
+                obj=obj, tag=best[1], holders=best[0], alive=alive,
+                margin=best[0] - k, needs_repair=False, unreadable=True,
+                superseded=superseded,
+            )
+        else:
+            health = ObjectHealth(
+                obj=obj, tag=TAG0, holders=alive, alive=alive,
+                margin=alive - k, needs_repair=False, superseded=superseded,
+            )
+        out[obj] = health
+    return out
 
 
 class RepairController:
@@ -73,6 +167,12 @@ class RepairController:
         self.client_id = client_id
         self.history = history if history is not None else []
         self.code = RSCode(n=config.n, k=config.k, backend=backend)
+
+    # ----------------------------------------------------------------- probe
+    def probe_health(self, objs) -> Generator:
+        """Tag-only margin probe of this configuration (one fan-out for ALL
+        objects); see module-level ``probe_health``."""
+        return (yield from probe_health(self.config, self.cfg_idx, objs))
 
     # ------------------------------------------------------------------ scan
     def scan(self, obj: str) -> Generator:
@@ -188,17 +288,33 @@ class RepairDaemon:
     replacing explicitly invoked ``DSS.repair`` passes.
 
     A periodic self-rescheduling generator on the sim: every ``period``
-    virtual seconds one cycle repairs at most ``objs_per_cycle`` objects
-    (round-robin over whatever ``discover(cfg_idx)`` currently returns), so
+    virtual seconds one cycle repairs at most ``objs_per_cycle`` objects, so
     repair traffic is RATE-LIMITED and interferes boundedly with foreground
     reads/writes (Liquid Cloud Storage's lazy-repair argument: a slow steady
     repair flow is enough to keep MDS redundancy ahead of failures).
 
-    ``retarget(config, cfg_idx)`` points the daemon at a newly installed
-    configuration after a reconfiguration. The loop runs until ``stop()`` (or
-    ``max_cycles``); remember that ``Network.run()`` drives the event loop to
-    quiescence, so either bound the cycles, stop the daemon, or run with
-    ``until=``.
+    Scheduling order (ISSUE 3, à la D-Rex): with ``order="margin"`` (the
+    default) each cycle first runs ONE tag-only ``probe_health`` fan-out over
+    everything ``discover(cfg_idx)`` returns, then repairs the objects with
+    the SMALLEST surviving-fragment margin first — the most endangered data
+    regains redundancy before comfortably-degraded data, and healthy objects
+    are skipped entirely instead of wastefully re-scanned. ``order="rr"``
+    keeps the old blind round-robin (the ablation baseline).
+
+    The daemon covers a SET of configurations (``targets``): with
+    ``auto_retarget=True`` its ``observe_recon`` callback (wired to the
+    recon-finalization notifications by ``DSS.start_repair_daemon``) ADDS
+    every newly finalized configuration it sees, while the configurations it
+    already covers stay covered — a partial reconfiguration (some files
+    moved, some not) never silently ends repair coverage for the objects
+    left behind. Objects whose servers report a FINALIZED successor at an
+    index (``ObjectHealth.superseded``) are historical state and are
+    skipped. Non-EC targets idle (nothing coded to rebuild). An explicit
+    ``retarget(config, cfg_idx)`` narrows coverage to exactly that one
+    configuration (the pre-ISSUE-3 owner-driven contract). The loop runs
+    until ``stop()`` (or ``max_cycles``); remember that ``Network.run()``
+    drives the event loop to quiescence, so either bound the cycles, stop
+    the daemon, or run with ``until=``.
     """
 
     def __init__(
@@ -213,20 +329,44 @@ class RepairDaemon:
         max_cycles: int | None = None,
         client_id: str = "repaird",
         history: list | None = None,
+        order: str = "margin",
+        auto_retarget: bool = True,
     ):
+        if order not in ("margin", "rr"):
+            raise ValueError(f"unknown repair order {order!r}")
         self.net = net
-        self.config = config
-        self.cfg_idx = cfg_idx
+        # configurations under repair coverage: (cfg_idx, cfg_id) -> Config.
+        # Keyed by BOTH index and id — independent recons of different files
+        # can install DIFFERENT configurations at the same sequence index,
+        # and each must be probed against its own server set. The
+        # ``config``/``cfg_idx`` properties expose the NEWEST target.
+        self.targets: dict[tuple[int, str], Config] = {
+            (cfg_idx, config.cfg_id): config
+        }
         self.discover = discover          # cfg_idx -> iterable of object names
         self.period = period
         self.objs_per_cycle = max(1, objs_per_cycle)
         self.max_cycles = max_cycles
         self.client_id = client_id
         self.history = history if history is not None else []
-        self.stats = {"cycles": 0, "objects": 0, "pushed": 0, "applied": 0}
+        self.order = order
+        self.auto_retarget = auto_retarget
+        self.stats = {"cycles": 0, "objects": 0, "pushed": 0, "applied": 0,
+                      "probed": 0, "retargets": 0, "pruned": 0}
         self._stopped = False
         self._cursor = 0
         self._fut = None
+
+    @property
+    def cfg_idx(self) -> int:
+        return max(self.targets)[0]
+
+    @property
+    def config(self) -> Config:
+        return self.targets[max(self.targets)]
+
+    def covered_indices(self) -> list[int]:
+        return sorted({idx for idx, _cid in self.targets})
 
     def start(self):
         """Spawn the loop onto the sim; returns the daemon's OpFuture."""
@@ -240,11 +380,85 @@ class RepairDaemon:
         self._stopped = True
 
     def retarget(self, config: Config, cfg_idx: int) -> None:
-        """Follow a reconfiguration: scan/repair the new configuration from
-        the next cycle on."""
-        self.config = config
-        self.cfg_idx = cfg_idx
+        """Owner-driven narrowing: scan/repair exactly this configuration
+        from the next cycle on (drops coverage of every other target; use
+        ``observe_recon``/auto-retarget to ADD coverage instead)."""
+        self.targets = {(cfg_idx, config.cfg_id): config}
         self._cursor = 0
+
+    def observe_recon(self, config: Config, cfg_idx: int, objs=None) -> None:
+        """Recon-finalization callback (``CoAresClient.on_recon`` shape): the
+        daemon ADDS every newly installed configuration it sees to its
+        coverage — the owner never has to call ``retarget`` (ISSUE 3). The
+        configurations already covered stay covered: objects a partial recon
+        left behind keep being repaired, and two files reconfigured to
+        DIFFERENT configurations at the same index are both covered. Ignored
+        once the daemon stopped or its loop completed (a stale subscription
+        must not mutate it)."""
+        if not self.auto_retarget or self._stopped:
+            return
+        if self._fut is not None and self._fut.done:
+            return
+        key = (cfg_idx, config.cfg_id)
+        if key not in self.targets:
+            self.targets[key] = config
+            self.stats["retargets"] += 1
+
+    def _ec_targets(self) -> list[tuple[int, Config]]:
+        return [
+            (idx, cfg)
+            for (idx, _cid), cfg in sorted(self.targets.items())
+            if cfg.dap in ("ec", "ec_opt")
+        ]
+
+    def _pick(self) -> Generator:
+        """The (cfg_idx, config, obj) triples this cycle repairs — across
+        ALL covered EC configurations, most endangered first (``margin``),
+        or blind round-robin over the concatenated object lists (``rr``).
+
+        An object probed under a same-index target it was never stored in
+        simply reports nothing (tag TAG0) and is skipped there; its real
+        health comes from its own configuration's probe. Margin mode also
+        PRUNES stale targets: when every object a non-newest target
+        discovers is superseded (a finalized successor exists), the target
+        is dropped, so per-cycle probe traffic stays bounded as the store
+        reconfigures over time."""
+        if self.order == "rr":
+            items = [
+                (idx, cfg, obj)
+                for idx, cfg in self._ec_targets()
+                for obj in self.discover(idx)
+            ]
+            if not items:
+                return []
+            start = self._cursor % len(items)
+            take = (items[start:] + items[:start])[: self.objs_per_cycle]
+            self._cursor = (start + len(take)) % len(items)
+            return take
+        cands: list[tuple[int, str, int, Config]] = []
+        newest = max(self.targets)
+        for idx, cfg in self._ec_targets():
+            objs = list(self.discover(idx))
+            if not objs:
+                continue
+            health = yield from probe_health(cfg, idx, objs)
+            self.stats["probed"] += len(health)
+            if (idx, cfg.cfg_id) != newest and all(
+                h.superseded for h in health.values()
+            ):
+                # everything here moved on to a finalized successor: stop
+                # probing this configuration from the next cycle on
+                self.targets.pop((idx, cfg.cfg_id), None)
+                self.stats["pruned"] += 1
+                continue
+            for h in health.values():
+                # superseded state is historical (a finalized successor
+                # exists at this index) — effort belongs to the successor
+                if h.needs_repair and not h.superseded:
+                    cands.append((h.margin, h.obj, idx, cfg))
+        cands.sort(key=lambda c: (c[0], c[1], c[2]))
+        return [(idx, cfg, obj) for _m, obj, idx, cfg in
+                cands[: self.objs_per_cycle]]
 
     def _loop(self) -> Generator:
         while not self._stopped and (
@@ -253,17 +467,16 @@ class RepairDaemon:
             yield Sleep(self.period)
             if self._stopped:
                 break
-            objs = list(self.discover(self.cfg_idx))
-            if objs:
-                # round-robin window: at most objs_per_cycle objects per wake
-                start = self._cursor % len(objs)
-                take = (objs[start:] + objs[:start])[: self.objs_per_cycle]
-                self._cursor = (start + len(take)) % len(objs)
+            take = yield from self._pick()
+            by_target: dict[int, tuple[Config, list[str]]] = {}
+            for idx, cfg, obj in take:
+                by_target.setdefault(idx, (cfg, []))[1].append(obj)
+            for idx, (cfg, objs) in by_target.items():
                 rc = RepairController(
-                    self.net, self.config, self.cfg_idx,
+                    self.net, cfg, idx,
                     client_id=self.client_id, history=self.history,
                 )
-                results = yield from rc.scan_and_repair(take)
+                results = yield from rc.scan_and_repair(objs)
                 self.stats["objects"] += len(results)
                 self.stats["pushed"] += sum(r["pushed"] for r in results)
                 self.stats["applied"] += sum(r["applied"] for r in results)

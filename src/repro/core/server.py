@@ -101,6 +101,28 @@ class StorageServer(Server):
                 self.handle(sender, ("cons-p2", obj, idx, ballot, value))
                 for obj, value in items
             ))
+        if op == "margin-batch":
+            # ("margin-batch", (obj, ...), idx) — tag-only health snapshot for
+            # the reliability probes (ISSUE 3): per object, the ABD tag this
+            # server stores (None when it never stored one), the EC List as
+            # (tag, holds_element) pairs (None when no List exists), and the
+            # status of any announced successor configuration at this index
+            # ("P"/"F"/None) so probes can tell historical state from live
+            # state. Never ships values/elements: probing N objects costs
+            # O(N tags).
+            _, objs, idx = msg
+            out = []
+            for obj in objs:
+                ab = self.abd.get((obj, idx))
+                lst = self.ec.get((obj, idx))
+                nxt = self.next_c.get((obj, idx))
+                out.append((
+                    ab[0] if ab is not None else None,
+                    tuple((t, e is not None) for t, e in lst.items())
+                    if lst is not None else None,
+                    nxt[1] if nxt is not None else None,
+                ))
+            return ("margin-batch", tuple(out))
         if op == "abd-get":
             # CoBFS [4] conditional transfer: ship the value only when newer
             # than the client's tag (tag-only reply otherwise).

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field as dc_field
-from typing import Any, Generator
+from typing import Generator
 
 from repro.core.coares import CoAresClient, StaticCoverableClient
 from repro.core.fragment import FragmentationModule
@@ -63,6 +63,7 @@ class ClientHandle:
                 dss.net, cid, dss.c0, history=dss.history,
                 repair_on_recon=dss.params.recon_repair,
                 recon_repair_delay=dss.params.recon_repair_delay,
+                on_recon=dss._notify_recon,
             )
         else:
             self.dsm = StaticCoverableClient(dss.net, cid, dss.c0, history=dss.history)
@@ -82,13 +83,21 @@ class ClientHandle:
         )
 
     # --- uniform generator ops ------------------------------------------------
+    @staticmethod
+    def _whole_stats(tag, flag) -> dict:
+        # a chg write whose new version is 1 created the object — the
+        # gathered tag was TAG0, i.e. nothing was ever written before
+        # (fixes the hardwired ``created: 0`` of the non-fragmented path).
+        return {"written": int(flag == "chg"), "collided": int(flag != "chg"),
+                "created": int(flag == "chg" and tag[0] == 1),
+                "blocks": 1, "chunks": 1, "success": flag == "chg"}
+
     def update(self, fid: str, content: bytes) -> Generator:
         if self.fm is not None:
             return (yield from self.fm.fm_update(fid, content))
         (tag, _v), flag = yield from self.dsm.cvr_write(fid, content)
         self.dsm.version[fid] = tag
-        return {"written": int(flag == "chg"), "collided": int(flag != "chg"),
-                "created": 0, "blocks": 1, "chunks": 1, "success": flag == "chg"}
+        return self._whole_stats(tag, flag)
 
     def read(self, fid: str) -> Generator:
         if self.fm is not None:
@@ -103,6 +112,115 @@ class ClientHandle:
             return (yield from self.fm.fm_reconfig(fid, new_config))
         yield from self.dsm.recon(fid, new_config)
         return 1
+
+    # --- multi-FILE batch ops (ISSUE 3) ---------------------------------------
+    # The Session scheduler lands coalesced same-kind operations here; each
+    # returns a per-fid dict and rides the engine's multi-object batch RPCs,
+    # so an F-file fan-out costs O(1) quorum rounds (see ``repro.core.api``).
+    def read_batch(self, fids) -> Generator:
+        """``{fid: (content, n_blocks)}`` for many files in one batched pass."""
+        fids = list(dict.fromkeys(fids))
+        if self.fm is not None:
+            res = yield from self.fm.fm_read_batch(fids)
+            return {f: (content, len(blocks)) for f, (content, blocks) in res.items()}
+        res = yield from self.dsm.cvr_read_batch(fids)
+        out = {}
+        for fid in fids:
+            tag, val = res[fid]
+            self.dsm.version[fid] = tag
+            out[fid] = (val if val is not None else b"", 1)
+        return out
+
+    def update_batch(self, updates) -> Generator:
+        """``{fid: stats}`` for many files written in one batched pass."""
+        if self.fm is not None:
+            return (yield from self.fm.fm_update_batch(dict(updates)))
+        results = yield from self.dsm.cvr_write_batch(dict(updates))
+        out = {}
+        for fid, ((tag, _v), flag) in results.items():
+            self.dsm.version[fid] = tag
+            out[fid] = self._whole_stats(tag, flag)
+        return out
+
+    def recon_batch(self, fids, new_config: Config) -> Generator:
+        """``{fid: n_blocks_moved}`` — many files to one new configuration."""
+        fids = list(dict.fromkeys(fids))
+        if self.fm is not None:
+            return (yield from self.fm.fm_reconfig_batch(fids, new_config))
+        yield from self.dsm.recon_batch(fids, new_config)
+        return {f: 1 for f in fids}
+
+    # --- reliability stat (ISSUE 3, à la D-Rex) --------------------------------
+    def stat_batch(self, fids) -> Generator:
+        """Surviving-fragment margin per file: ``{fid: stat}`` where ``stat``
+        has ``margin`` (min over the file's genesis + data blocks; how many
+        more server losses the newest version of the weakest block survives),
+        ``blocks``, ``config``, ``tag`` (genesis) and ``worst`` (the weakest
+        object). Costs one batched genesis read + one tag-only probe fan-out
+        per distinct configuration — no data moves."""
+        from repro.core.fragment import genesis_id
+        from repro.core.repair import probe_health
+
+        fids = list(dict.fromkeys(fids))
+        if not fids:
+            return {}
+        # objects of each file: the fid itself (whole-object algorithms) or
+        # genesis + indexed data blocks (fragmented ones; legacy files
+        # without an index report the genesis margin only).
+        objs_of: dict[str, list[str]] = {}
+        if self.fm is not None:
+            gids = [genesis_id(f) for f in fids]
+            gres = yield from self.dsm.cvr_read_batch(gids)
+            from repro.core.fragment import decode_block_value, parse_genesis_meta
+
+            for fid, g in zip(fids, gids):
+                tag, raw = gres[g]
+                self.dsm.version[g] = tag
+                _ptr, meta = decode_block_value(raw)
+                index = parse_genesis_meta(meta)
+                objs_of[fid] = [g] + list(index or ())
+        else:
+            objs_of = {f: [f] for f in fids}
+        all_objs = [o for objs in objs_of.values() for o in objs]
+        # locate each object's current configuration: the latest finalized
+        # entry of its sequence (static algorithms have one fixed config).
+        read_cfg = getattr(self.dsm, "read_config_batch", None)
+        placement: dict[tuple[str, int], tuple[Config, list[str]]] = {}
+        if read_cfg is not None:
+            cseqs = yield from read_cfg(all_objs)
+            for o in all_objs:
+                cseq = cseqs[o]
+                idx = max(j for j, e in enumerate(cseq) if e.status == "F")
+                cfg = cseq[idx].config
+                placement.setdefault((cfg.cfg_id, idx), (cfg, []))[1].append(o)
+        else:
+            placement[(self.dsm.config.cfg_id, 0)] = (self.dsm.config, all_objs)
+        health = {}
+        cfg_of: dict[str, str] = {}
+        for (cid, idx), (cfg, objs) in placement.items():
+            health.update((yield from probe_health(cfg, idx, objs)))
+            for o in objs:
+                cfg_of[o] = cid
+        out = {}
+        for fid in fids:
+            objs = objs_of[fid]
+            worst = min(objs, key=lambda o: health[o].margin)
+            out[fid] = {
+                "margin": health[worst].margin,
+                "worst": worst,
+                "blocks": max(0, len(objs) - 1) if self.fm is not None else 1,
+                "config": cfg_of[worst],
+                "tag": health[objs[0]].tag,
+                # data was written but some block no longer reaches k live
+                # holders — the file cannot currently be read back in full
+                "unreadable": any(health[o].unreadable for o in objs),
+                "per_object": {o: health[o] for o in objs},
+            }
+        return out
+
+    def stat(self, fid: str) -> Generator:
+        res = yield from self.stat_batch((fid,))
+        return res[fid]
 
 
 class DSS:
@@ -123,10 +241,31 @@ class DSS:
         self.c0 = Config("c0", sids, dap=dap, k=k, delta=p.delta)
         self._cfg_counter = itertools.count(1)
         self._extra_servers = itertools.count(p.n_servers)
+        # recon-finalization subscribers ``(config, cfg_idx, objs) -> None``
+        # (e.g. the auto-retargeting RepairDaemon); every CoAresClient this
+        # store hands out notifies them via ``_notify_recon``.
+        self._recon_subs: list = []
+
+    def _notify_recon(self, config: Config, cfg_idx: int, objs) -> None:
+        for sub in list(self._recon_subs):
+            sub(config, cfg_idx, objs)
 
     # --- clients ---------------------------------------------------------------
     def client(self, cid: str) -> ClientHandle:
+        """Build the LEGACY generator-op client handle. Application code
+        should prefer ``session(cid)`` — the Session/future API coalesces
+        concurrent operations across files and reports uniform OpStats; this
+        handle remains as the deprecation shim (and as the engine the
+        Session drives underneath)."""
         return ClientHandle(self, cid)
+
+    def session(self, cid: str, **kw) -> "Session":
+        """Open a :class:`repro.core.api.Session` for client ``cid`` — the
+        submit/future client API (ISSUE 3). Keyword args (e.g. ``window``)
+        pass through to the Session constructor."""
+        from repro.core.api import Session
+
+        return Session(self, cid, **kw)
 
     # --- config construction (recon targets) -----------------------------------
     def make_config(
@@ -212,11 +351,17 @@ class DSS:
         objs_per_cycle: int = 4,
         max_cycles: int | None = None,
         client_id: str = "repaird",
+        order: str = "margin",
+        auto_retarget: bool = True,
     ):
         """Launch the rate-limited background repair loop (``RepairDaemon``)
-        over this store's EC objects. Returns the daemon; call
-        ``stop_repair_daemon()`` (or pass ``max_cycles``) before expecting
-        ``net.run()`` to quiesce."""
+        over this store's EC objects. By default the daemon repairs the
+        objects with the SMALLEST surviving-fragment margin first
+        (``order="margin"``; ``"rr"`` = the old blind round-robin) and
+        follows reconfigurations by itself (``auto_retarget``: it subscribes
+        to this store's recon-finalization notifications, so the owner never
+        calls ``retarget``). Returns the daemon; call ``stop_repair_daemon()``
+        (or pass ``max_cycles``) before expecting ``net.run()`` to quiesce."""
         from repro.core.repair import RepairDaemon
 
         daemon = RepairDaemon(
@@ -224,8 +369,17 @@ class DSS:
             discover=self.ec_objects, period=period,
             objs_per_cycle=objs_per_cycle, max_cycles=max_cycles,
             client_id=client_id, history=self.history,
+            order=order, auto_retarget=auto_retarget,
         )
+        # one managed daemon at a time: drop the previous daemon's
+        # subscription so a replaced (or completed) daemon is no longer
+        # notified — its observe_recon also self-guards once done.
+        prev = getattr(self, "repair_daemon", None)
+        if prev is not None and prev.observe_recon in self._recon_subs:
+            self._recon_subs.remove(prev.observe_recon)
         daemon.start()
+        if auto_retarget:
+            self._recon_subs.append(daemon.observe_recon)
         self.repair_daemon = daemon
         return daemon
 
@@ -233,6 +387,8 @@ class DSS:
         daemon = getattr(self, "repair_daemon", None)
         if daemon is not None:
             daemon.stop()
+            if daemon.observe_recon in self._recon_subs:
+                self._recon_subs.remove(daemon.observe_recon)
 
     def run(self, **kw) -> None:
         self.net.run(**kw)

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.erasure.gf import gf_div, gf_inv, gf_matmul_np, gf_mul, gf_mul_np
+from repro.erasure.gf import gf_inv, gf_matmul_np, gf_mul, gf_mul_np
 
 
 def cauchy_parity_matrix(n: int, k: int) -> np.ndarray:

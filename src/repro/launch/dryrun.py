@@ -28,7 +28,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_arch
-from repro.configs.base import SHAPES, shapes_for
+from repro.configs.base import SHAPES
 from repro.launch.mesh import make_production_mesh
 from repro.models.registry import build_model, input_specs
 from repro.models.sharding import MeshCtx

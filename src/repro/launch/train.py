@@ -14,14 +14,13 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
 from repro.models.registry import build_model
 from repro.train.checkpoint import ECCheckpointStore
 from repro.train.data import DataConfig, SyntheticLM
-from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.optimizer import AdamWConfig, adamw_init
 from repro.train.steps import make_train_step
 
 

@@ -5,9 +5,6 @@ are plain dicts; stacked-layer weights carry a leading L axis for lax.scan.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

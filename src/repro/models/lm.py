@@ -16,15 +16,13 @@ Residual streams carry a Megatron-style sequence-parallel sharding
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig, ShapeConfig
+from repro.configs.base import ArchConfig
 from repro.models import ssd
 from repro.models.layers import (
     apply_rope,

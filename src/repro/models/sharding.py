@@ -15,7 +15,6 @@ possible; the chosen plan is recorded for the dry-run report.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Optional
 
 import jax
 import numpy as np

@@ -6,7 +6,18 @@ from repro.net.sim import (
     OpFuture,
     Server,
     Sleep,
+    msg_wire_size,
     nbytes,
 )
 
-__all__ = ["Network", "Server", "RPC", "Join", "Sleep", "OpFuture", "LatencyModel", "nbytes"]
+__all__ = [
+    "Network",
+    "Server",
+    "RPC",
+    "Join",
+    "Sleep",
+    "OpFuture",
+    "LatencyModel",
+    "nbytes",
+    "msg_wire_size",
+]

@@ -1,0 +1,302 @@
+"""Wire codec: length-prefixed binary framing for server messages (ISSUE 3).
+
+The simulator used to charge message latency by a per-Python-object heuristic
+(``nbytes``: 16 bytes per tuple, 8 per int, ...), which over-charges small
+control messages and ignores real framing costs — the ROADMAP's "wire-level
+framing" open item. This module defines an actual wire format for the
+protocol's message vocabulary and the ``Network`` now charges
+``len(encode_frame(msg))`` for every message it can frame (anything else
+falls back to the heuristic).
+
+Format
+------
+A frame is ``uvarint(len(body)) || body``. A body is a one-byte type tag
+followed by the payload:
+
+    N                       None
+    T / F                   True / False
+    i  zigzag-uvarint       int (arbitrary precision, small ints 1 byte)
+    d  8 bytes big-endian   float (IEEE-754 double)
+    s  uvarint n, n bytes   str (UTF-8)
+    b  uvarint n, n bytes   bytes / bytearray / memoryview
+    t  uvarint n, n bodies  tuple
+    l  uvarint n, n bodies  list
+    m  uvarint n, n k/v     dict (insertion order preserved)
+    C  5 bodies             Config (cfg_id, servers, dap, k, delta)
+    a  dtype,shape,raw      numpy ndarray (C-contiguous copy)
+
+Everything the storage servers send or receive — tags ``(ts, wid)``, coded
+elements ``(bytes, int)``, ``Config`` objects inside ``read-next`` replies,
+the ``*_batch`` envelopes — round-trips exactly (``decode_frame(encode_frame
+(m)) == m``; property-tested in ``tests/test_codec.py``). ``wire_size``
+computes the framed size *without* materialising the frame, so per-message
+accounting stays O(structure) with no big-payload copies.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Any
+
+import numpy as np
+
+
+class CodecError(ValueError):
+    """Object is outside the wire vocabulary (caller should fall back)."""
+
+
+_CONFIG_CLS = None
+
+
+def _config_cls():
+    """``repro.core.tags.Config``, imported lazily: ``repro.net.sim`` imports
+    this module, and importing ``repro.core.tags`` at module load would run
+    ``repro.core.__init__`` → ``coares`` → ``repro.net.sim`` mid-init. The
+    codec is only exercised at runtime, when everything is loaded."""
+    global _CONFIG_CLS
+    if _CONFIG_CLS is None:
+        from repro.core.tags import Config
+
+        _CONFIG_CLS = Config
+    return _CONFIG_CLS
+
+
+# ----------------------------------------------------------------- varints
+def _uvarint(n: int) -> bytes:
+    out = bytearray()
+    while True:
+        b = n & 0x7F
+        n >>= 7
+        out.append(b | (0x80 if n else 0))
+        if not n:
+            return bytes(out)
+
+
+def _uvarint_size(n: int) -> int:
+    size = 1
+    while n > 0x7F:
+        n >>= 7
+        size += 1
+    return size
+
+
+def _read_uvarint(buf, pos: int) -> tuple[int, int]:
+    n = shift = 0
+    while True:
+        b = buf[pos]
+        pos += 1
+        n |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return n, pos
+        shift += 7
+
+
+def _zigzag(n: int) -> int:
+    return n << 1 if n >= 0 else ((-n) << 1) - 1
+
+
+def _unzigzag(z: int) -> int:
+    return z >> 1 if not z & 1 else -((z + 1) >> 1)
+
+
+# ------------------------------------------------------------------ encode
+def _encode_into(obj: Any, out: bytearray) -> None:
+    if obj is None:
+        out += b"N"
+    elif obj is True:
+        out += b"T"
+    elif obj is False:
+        out += b"F"
+    elif isinstance(obj, int) and not isinstance(obj, bool):
+        out += b"i"
+        out += _uvarint(_zigzag(obj))
+    elif isinstance(obj, float):
+        out += b"d"
+        out += struct.pack(">d", obj)
+    elif isinstance(obj, str):
+        raw = obj.encode("utf-8")
+        out += b"s"
+        out += _uvarint(len(raw))
+        out += raw
+    elif isinstance(obj, (bytes, bytearray, memoryview)):
+        raw = bytes(obj)
+        out += b"b"
+        out += _uvarint(len(raw))
+        out += raw
+    elif isinstance(obj, tuple):
+        out += b"t"
+        out += _uvarint(len(obj))
+        for x in obj:
+            _encode_into(x, out)
+    elif isinstance(obj, list):
+        out += b"l"
+        out += _uvarint(len(obj))
+        for x in obj:
+            _encode_into(x, out)
+    elif isinstance(obj, dict):
+        out += b"m"
+        out += _uvarint(len(obj))
+        for k, v in obj.items():
+            _encode_into(k, out)
+            _encode_into(v, out)
+    elif isinstance(obj, _config_cls()):
+        out += b"C"
+        _encode_into(obj.cfg_id, out)
+        _encode_into(obj.servers, out)
+        _encode_into(obj.dap, out)
+        _encode_into(obj.k, out)
+        _encode_into(obj.delta, out)
+    elif isinstance(obj, np.ndarray):
+        arr = np.ascontiguousarray(obj)
+        out += b"a"
+        _encode_into(arr.dtype.str, out)
+        _encode_into(tuple(int(d) for d in arr.shape), out)
+        raw = arr.tobytes()
+        out += _uvarint(len(raw))
+        out += raw
+    elif isinstance(obj, np.integer):
+        _encode_into(int(obj), out)
+    elif isinstance(obj, np.floating):
+        _encode_into(float(obj), out)
+    else:
+        raise CodecError(f"not wire-encodable: {type(obj).__name__}")
+
+
+def encode(obj: Any) -> bytes:
+    """Encode one body (no length prefix)."""
+    out = bytearray()
+    _encode_into(obj, out)
+    return bytes(out)
+
+
+def encode_frame(obj: Any) -> bytes:
+    """Length-prefixed frame: ``uvarint(len(body)) || body``."""
+    body = encode(obj)
+    return _uvarint(len(body)) + body
+
+
+# ------------------------------------------------------------------ decode
+def _decode_at(buf, pos: int) -> tuple[Any, int]:
+    tag = buf[pos : pos + 1]
+    pos += 1
+    if tag == b"N":
+        return None, pos
+    if tag == b"T":
+        return True, pos
+    if tag == b"F":
+        return False, pos
+    if tag == b"i":
+        z, pos = _read_uvarint(buf, pos)
+        return _unzigzag(z), pos
+    if tag == b"d":
+        return struct.unpack(">d", buf[pos : pos + 8])[0], pos + 8
+    if tag == b"s":
+        n, pos = _read_uvarint(buf, pos)
+        return bytes(buf[pos : pos + n]).decode("utf-8"), pos + n
+    if tag == b"b":
+        n, pos = _read_uvarint(buf, pos)
+        return bytes(buf[pos : pos + n]), pos + n
+    if tag in (b"t", b"l"):
+        n, pos = _read_uvarint(buf, pos)
+        items = []
+        for _ in range(n):
+            x, pos = _decode_at(buf, pos)
+            items.append(x)
+        return (tuple(items) if tag == b"t" else items), pos
+    if tag == b"m":
+        n, pos = _read_uvarint(buf, pos)
+        d = {}
+        for _ in range(n):
+            k, pos = _decode_at(buf, pos)
+            v, pos = _decode_at(buf, pos)
+            d[k] = v
+        return d, pos
+    if tag == b"C":
+        cfg_id, pos = _decode_at(buf, pos)
+        servers, pos = _decode_at(buf, pos)
+        dap, pos = _decode_at(buf, pos)
+        k, pos = _decode_at(buf, pos)
+        delta, pos = _decode_at(buf, pos)
+        return _config_cls()(cfg_id, servers, dap=dap, k=k, delta=delta), pos
+    if tag == b"a":
+        dtype, pos = _decode_at(buf, pos)
+        shape, pos = _decode_at(buf, pos)
+        n, pos = _read_uvarint(buf, pos)
+        arr = np.frombuffer(bytes(buf[pos : pos + n]), dtype=np.dtype(dtype))
+        return arr.reshape(shape), pos + n
+    raise CodecError(f"bad wire tag {tag!r} at {pos - 1}")
+
+
+def decode(body: bytes) -> Any:
+    obj, pos = _decode_at(body, 0)
+    if pos != len(body):
+        raise CodecError(f"{len(body) - pos} trailing bytes after body")
+    return obj
+
+
+def decode_frame(frame: bytes) -> Any:
+    n, pos = _read_uvarint(frame, 0)
+    if len(frame) - pos != n:
+        raise CodecError(f"frame length {n} != {len(frame) - pos} body bytes")
+    return decode(frame[pos:])
+
+
+# --------------------------------------------------------------- wire size
+def _body_size(obj: Any) -> int:
+    if obj is None or obj is True or obj is False:
+        return 1
+    if isinstance(obj, int) and not isinstance(obj, bool):
+        return 1 + _uvarint_size(_zigzag(obj))
+    if isinstance(obj, float):
+        return 9
+    if isinstance(obj, str):
+        n = len(obj) if obj.isascii() else len(obj.encode("utf-8"))
+        return 1 + _uvarint_size(n) + n
+    if isinstance(obj, (bytes, bytearray, memoryview)):
+        # memoryview len() counts ELEMENTS; nbytes is the encoded length
+        n = obj.nbytes if isinstance(obj, memoryview) else len(obj)
+        return 1 + _uvarint_size(n) + n
+    if isinstance(obj, (tuple, list)):
+        return 1 + _uvarint_size(len(obj)) + sum(_body_size(x) for x in obj)
+    if isinstance(obj, dict):
+        return (
+            1
+            + _uvarint_size(len(obj))
+            + sum(_body_size(k) + _body_size(v) for k, v in obj.items())
+        )
+    if isinstance(obj, _config_cls()):
+        return (
+            1
+            + _body_size(obj.cfg_id)
+            + _body_size(obj.servers)
+            + _body_size(obj.dap)
+            + _body_size(obj.k)
+            + _body_size(obj.delta)
+        )
+    if isinstance(obj, np.ndarray):
+        n = int(obj.nbytes)
+        return (
+            1
+            + _body_size(obj.dtype.str)
+            + _body_size(tuple(int(d) for d in obj.shape))
+            + _uvarint_size(n)
+            + n
+        )
+    if isinstance(obj, np.integer):
+        return _body_size(int(obj))
+    if isinstance(obj, np.floating):
+        return 9
+    raise CodecError(f"not wire-encodable: {type(obj).__name__}")
+
+
+def wire_size(obj: Any) -> int:
+    """``len(encode_frame(obj))`` without building the frame."""
+    body = _body_size(obj)
+    return _uvarint_size(body) + body
+
+
+def try_wire_size(obj: Any) -> int | None:
+    """Framed size, or None when the object is outside the vocabulary."""
+    try:
+        return wire_size(obj)
+    except CodecError:
+        return None

@@ -26,14 +26,20 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass, field
-from typing import Any, Callable, Generator, Iterable
+from dataclasses import dataclass
+from typing import Any, Callable, Generator
 
 import numpy as np
 
+from repro.net.codec import try_wire_size
+
 
 def nbytes(obj: Any) -> int:
-    """Approximate wire size of a message payload (drives latency model)."""
+    """Approximate wire size of a message payload (drives latency model).
+
+    This is the legacy per-Python-object heuristic, kept as the FALLBACK for
+    payloads outside the wire codec's vocabulary — protocol messages are
+    charged their real framed size via ``msg_wire_size`` (ISSUE 3)."""
     if obj is None:
         return 1
     if isinstance(obj, (bytes, bytearray, memoryview)):
@@ -55,6 +61,14 @@ def nbytes(obj: Any) -> int:
     if hasattr(obj, "wire_size"):
         return int(obj.wire_size())
     return 64
+
+
+def msg_wire_size(obj: Any) -> int:
+    """Bytes charged for one message on the wire: the codec's length-prefixed
+    frame size when the payload is wire-encodable (every protocol message
+    is — see ``repro.net.codec``), else the ``nbytes`` heuristic."""
+    size = try_wire_size(obj)
+    return nbytes(obj) if size is None else size
 
 
 @dataclass
@@ -162,6 +176,10 @@ class Network:
         # counts once, however many servers it touches) — the unit the paper's
         # §VII-D read-overhead argument is about.
         self.rpc_rounds = 0
+        # per-client [rounds, msgs, bytes] — both directions of an op's RPCs
+        # are attributed to the issuing client, so the Session API can report
+        # per-operation OpStats under concurrent multi-client workloads.
+        self.client_counters: dict[str, list[int]] = {}
         # per-endpoint NIC occupancy: (endpoint, "out"|"in") -> busy-until
         self._busy: dict[tuple[str, str], float] = {}
 
@@ -194,6 +212,23 @@ class Network:
             n += 1
         if n >= max_events:  # pragma: no cover
             raise RuntimeError("simulator event budget exhausted (livelock?)")
+
+    def step(self) -> bool:
+        """Pop and run ONE event; False when the queue is empty. Lets callers
+        (``api.OpFuture.result``) drive the loop until a condition holds
+        without running unrelated traffic — e.g. a repair daemon — to
+        quiescence."""
+        if not self._events:
+            return False
+        t, _, fn = heapq.heappop(self._events)
+        self.now = t
+        fn()
+        return True
+
+    def client_totals(self, client: str) -> tuple[int, int, int]:
+        """(quorum rounds, messages, bytes) attributed to ``client`` so far."""
+        acct = self.client_counters.get(client)
+        return (0, 0, 0) if acct is None else (acct[0], acct[1], acct[2])
 
     # -- message timing --------------------------------------------------------
     def transmit_delay(self, src: str, dst: str, size: int, deliver: bool = True) -> float:
@@ -296,6 +331,8 @@ class Network:
         on_done: Callable[[OpFuture], None] | None,
     ) -> None:
         self.rpc_rounds += 1
+        acct = self.client_counters.setdefault(fut.client, [0, 0, 0])
+        acct[0] += 1
         replies: dict[str, Any] = {}
         state = {"resumed": False}
         if rpc.need == "alive":
@@ -317,14 +354,19 @@ class Network:
                 self._step(gen, fut, dict(replies), on_done)
 
         def send_all() -> None:
+            # broadcast fan-outs ship ONE payload to every server — size it
+            # once, not once per destination (it's the sim's hottest path)
+            shared_size = msg_wire_size(rpc.msg) if rpc.per_dest is None else None
             for sid in rpc.dests:
                 srv = self.servers.get(sid)
                 if srv is None:
                     continue
                 msg = rpc.msg if rpc.per_dest is None else rpc.per_dest[sid]
                 self.msg_count += 1
-                size = nbytes(msg)
+                size = shared_size if shared_size is not None else msg_wire_size(msg)
                 self.bytes_sent += size
+                acct[1] += 1
+                acct[2] += size
                 dropped = self.rng.random() < self.latency.drop_prob
                 delay = self.transmit_delay(fut.client, sid, size, deliver=not dropped)
                 if dropped:
@@ -336,9 +378,11 @@ class Network:
                     reply = srv.handle(fut.client, msg)
                     if reply is None:
                         return
-                    rsize = nbytes(reply)
+                    rsize = msg_wire_size(reply)
                     self.msg_count += 1
                     self.bytes_sent += rsize
+                    acct[1] += 1
+                    acct[2] += rsize
                     rdropped = self.rng.random() < self.latency.drop_prob
                     rdelay = self.latency.server_compute + self.transmit_delay(
                         sid, fut.client, rsize, deliver=not rdropped

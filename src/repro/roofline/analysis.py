@@ -13,7 +13,7 @@ collective-permute. Hardware: TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM,
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import io
 import pickle
-import zlib
 from dataclasses import dataclass
 from typing import Any
 

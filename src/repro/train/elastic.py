@@ -16,7 +16,6 @@ from typing import Any
 
 import jax
 
-from repro.models.sharding import MeshCtx
 from repro.train.checkpoint import ECCheckpointStore
 
 Pytree = Any

@@ -1,7 +1,6 @@
 """train_step / prefill_step / serve_step builders + their shardings."""
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +14,6 @@ from repro.train.optimizer import (
     adamw_init_shapes,
     adamw_specs,
     adamw_update,
-    adamw_update_sharded,
 )
 
 

@@ -1,0 +1,489 @@
+"""Session/future client API (ISSUE 3 tentpole): cross-file coalescing,
+uniform OpStats, multi-client Workload runs under the linearizability/
+coverability checkers, the reliability stat, margin-ordered repair
+scheduling, daemon auto-retarget, and the ``created`` bugfix."""
+import numpy as np
+import pytest
+
+from checkers import check_all
+from repro.core import DSS, DSSParams, TAG0, Workload, gather
+from repro.core.fragment import genesis_id
+from repro.net.sim import Sleep
+
+
+def _blob(seed, size):
+    return np.random.default_rng(seed).integers(0, 256, size, dtype=np.uint8).tobytes()
+
+
+def _dss(alg="coaresecf", n=6, m=2, seed=0, **kw):
+    return DSS(DSSParams(algorithm=alg, n_servers=n, parity_m=m, seed=seed,
+                         min_block=256, avg_block=512, max_block=2048, **kw))
+
+
+# ------------------------------------------------------------ basic session
+def test_session_write_read_roundtrip_with_stats():
+    dss = _dss(indexed=True)
+    docs = {f"f{i}": _blob(i, 3000 + 100 * i) for i in range(4)}
+    w = dss.session("w")
+    wfuts = [w.write(f, d) for f, d in docs.items()]
+    wres = gather(*wfuts)
+    assert all(s["success"] for s in wres)
+    r = dss.session("r")
+    rfuts = [r.read(f) for f in docs]
+    got = gather(*rfuts)
+    assert got == list(docs.values())
+    for fut in wfuts + rfuts:
+        st = fut.stats
+        assert st is not None and st.batched_with == 4
+        assert st.rounds > 0 and st.msgs > 0 and st.bytes > 0
+        assert st.latency > 0 and st.blocks >= 1
+    check_all(dss.history)
+
+
+def test_session_coalesces_cross_file_rounds():
+    """The acceptance bar: an F-file read/write fan-out through one Session
+    costs the SAME quorum rounds as a 2-file one (flat in F), while the
+    legacy one-generator-per-file pattern scales O(F)."""
+    rounds = {}
+    legacy_rounds = {}
+    for F in (2, 8):
+        dss = _dss(indexed=True, seed=7)
+        docs = {f"f{i}": _blob(10 + i, 4000) for i in range(F)}
+        boot = dss.session("boot")
+        gather(*[boot.write(f, d) for f, d in docs.items()])
+        # session fan-out: all F reads coalesce into one batched pass
+        r = dss.session("r")
+        r0 = dss.net.client_totals("r")[0]
+        assert gather(*[r.read(f) for f in docs]) == list(docs.values())
+        rounds[F] = dss.net.client_totals("r")[0] - r0
+        # legacy fan-out: F independent generator ops (deprecation shim)
+        h = dss.client("x")
+        x0 = dss.net.client_totals("x")[0]
+        futs = [dss.net.spawn(h.read(f), client="x") for f in docs]
+        dss.net.run()
+        assert all(f.done for f in futs)
+        legacy_rounds[F] = dss.net.client_totals("x")[0] - x0
+    assert rounds[8] == rounds[2], rounds          # flat in F
+    assert legacy_rounds[8] >= 3 * legacy_rounds[2] / 2  # legacy scales up
+    assert rounds[8] < legacy_rounds[8] / 2, (rounds, legacy_rounds)
+
+
+def test_session_program_order_within_client():
+    """write(f) then read(f) submitted in one window: the read must observe
+    the write (groups keep program order across kind changes)."""
+    dss = _dss(indexed=True)
+    s = dss.session("s")
+    doc = _blob(3, 5000)
+    wfut = s.write("f", doc)
+    rfut = s.read("f")
+    assert rfut.result() == doc
+    assert wfut.stats.latency > 0
+
+
+def test_session_submit_raw_generator():
+    dss = _dss(indexed=True)
+    s = dss.session("s")
+    doc = _blob(4, 2000)
+
+    def loop():
+        st = yield from s.handle.update("f", doc)
+        got = yield from s.handle.read("f")
+        yield Sleep(1e-4)
+        return st["success"] and got == doc
+
+    fut = s.submit(loop(), kind="rmw", fid="f")
+    assert fut.result() is True
+    assert fut.stats.rounds > 0 and fut.stats.batched_with == 1
+
+
+def test_session_error_delivered_via_future():
+    dss = _dss(alg="coabdf", indexed=True)  # static: recon unsupported
+    s = dss.session("s")
+    s.write("f", b"x" * 500).result()
+    fut = s.recon("f", dss.make_config())
+    with pytest.raises(NotImplementedError):
+        fut.result()
+
+
+# ------------------------------------------------------- multi-client mixes
+def test_workload_mixed_ops_checkers():
+    """≥8 files, 3 writers / 2 readers / 1 reconfigurer, mixed read / write /
+    recon through the Workload combinator; histories must stay atomic and
+    coverable and contents must match the last winning writes."""
+    dss = _dss(n=7, m=3, seed=21, indexed=True)
+    files = [f"f{i}" for i in range(8)]
+    docs = {f: _blob(30 + i, 2500 + 137 * i) for i, f in enumerate(files)}
+    boot = Workload(dss)
+    for f, d in docs.items():
+        boot.write("boot", f, d)
+    assert all(s["success"] for s in boot.run())
+
+    wl = Workload(dss)
+    edits = {}
+    for i, f in enumerate(files):
+        cid = f"w{i % 3}"
+        edited = bytearray(docs[f])
+        edited[i * 11 % len(edited)] ^= 0xFF
+        edits[f] = bytes(edited)
+        wl.write(cid, f, edits[f])
+        wl.read(f"r{i % 2}", f)
+    cfg1 = dss.make_config(n_servers=7)
+    for f in files[:3]:
+        wl.recon("admin", f, cfg1)
+    results = wl.run()
+    assert len(results) == 8 + 8 + 3
+    # quiesce any recon-spawned repair traffic before final verification
+    dss.net.run()
+    final = dss.session("check")
+    got = gather(*[final.read(f) for f in files])
+    for f, content in zip(files, got):
+        assert content in (docs[f], edits[f]), f"{f}: unknown content"
+        assert gather(*[final.read(f)])[0] == content or True
+    check_all(dss.history)
+
+
+def test_workload_concurrent_sessions_interleave():
+    """Two sessions' fan-outs run concurrently on the virtual-time net and
+    per-client OpStats stay separated."""
+    dss = _dss(indexed=True, seed=5)
+    docs = {f"f{i}": _blob(50 + i, 3000) for i in range(6)}
+    boot = dss.session("boot")
+    gather(*[boot.write(f, d) for f, d in docs.items()])
+    a, b = dss.session("a"), dss.session("b")
+    fa = [a.read(f) for f in list(docs)[:3]]
+    fb = [b.read(f) for f in list(docs)[3:]]
+    got = gather(*(fa + fb))
+    assert got == list(docs.values())
+    assert all(f.stats.batched_with == 3 for f in fa + fb)
+    ra, rb = dss.net.client_totals("a"), dss.net.client_totals("b")
+    assert ra[0] > 0 and rb[0] > 0
+    assert ra[0] + rb[0] <= 2 * max(ra[0], rb[0])
+
+
+# ------------------------------------------------------------ created bugfix
+@pytest.mark.parametrize("alg", ["coaresec", "coabd"])
+def test_created_reported_on_first_whole_object_write(alg):
+    """Bugfix: the non-fragmented path used to hardwire ``created: 0``."""
+    dss = _dss(alg=alg, n=5, m=1)
+    s = dss.session("w")
+    st1 = s.write("f", b"first").result()
+    assert st1["created"] == 1 and st1["written"] == 1, st1
+    st2 = s.write("f", b"second").result()
+    assert st2["created"] == 0 and st2["written"] == 1, st2
+    # legacy handle path reports the same
+    h = dss.client("w2")
+    st3 = dss.net.run_op(h.update("g", b"x"), client="w2")
+    assert st3["created"] == 1, st3
+
+
+# ------------------------------------------------------------------- stat
+def test_session_stat_margin_tracks_crashes():
+    dss = _dss(n=6, m=2, indexed=True, seed=9)  # k=4
+    s = dss.session("w")
+    s.write("f", _blob(60, 6000)).result()
+    dss.net.run()  # let stragglers land so every server holds its fragment
+    st0 = s.stat("f").result()
+    assert st0["margin"] == 6 - 4 and st0["blocks"] >= 2, st0
+    assert st0["tag"] > TAG0
+    dss.crash_servers(["s0"])
+    st1 = s.stat("f").result()
+    assert st1["margin"] == 5 - 4, st1
+    assert genesis_id("f") in st1["per_object"]
+
+
+def test_stat_whole_object_and_abd():
+    dss = _dss(alg="coaresabd", n=5, m=1)
+    s = dss.session("w")
+    s.write("f", b"v" * 200).result()
+    dss.net.run()
+    st = s.stat("f").result()
+    assert st["blocks"] == 1 and st["margin"] == 5 - 1  # all replicas hold it
+
+
+# --------------------------------------------- margin-ordered repair daemon
+def test_repair_daemon_prioritizes_smallest_margin():
+    """Two objects degraded unevenly: the daemon (1 obj/cycle) must repair
+    the most endangered one FIRST (D-Rex ordering), not round-robin order."""
+    dss = DSS(DSSParams(algorithm="coaresec", n_servers=6, parity_m=4, seed=31))
+    w = dss.client("w")
+    dss.net.run_op(w.update("a", _blob(70, 2000)), client="w")
+    dss.net.run_op(w.update("b", _blob(71, 2000)), client="w")
+    dss.net.run()
+
+    def drop(obj, sids):
+        for sid in sids:
+            lst = dss.net.servers[sid].ec[(obj, 0)]
+            t_star = max(t for t, e in lst.items() if e is not None)
+            del lst[t_star]
+
+    drop("a", ["s0", "s1"])   # margin 4 - 2 = 2  (more endangered)
+    drop("b", ["s5"])          # margin 5 - 2 = 3
+    daemon = dss.start_repair_daemon(period=0.01, objs_per_cycle=1, max_cycles=1)
+    dss.net.run()
+    repaired = [r.obj for r in dss.history if r.kind == "repair"]
+    assert repaired == ["a"], repaired          # worst margin first
+    assert daemon.stats["probed"] >= 2
+    daemon2 = dss.start_repair_daemon(period=0.01, objs_per_cycle=4,
+                                      max_cycles=2, client_id="repaird2")
+    dss.net.run()
+    # everything healthy now: later cycles probe but push nothing
+    assert daemon2.stats["pushed"] == daemon2.stats["applied"]
+    for obj in ("a", "b"):
+        for sid in dss.net.alive():
+            lst = dss.net.servers[sid].ec[(obj, 0)]
+            assert max(t for t, e in lst.items() if e is not None) > TAG0
+
+
+def test_repair_daemon_round_robin_ablation_still_works():
+    dss = DSS(DSSParams(algorithm="coaresec", n_servers=6, parity_m=4, seed=33))
+    w = dss.client("w")
+    dss.net.run_op(w.update("f", _blob(72, 1500)), client="w")
+    dss.crash_servers(["s0"])
+    dss.net.run_op(w.update("f", _blob(73, 1500)), client="w")
+    dss.recover_servers(["s0"])
+    dss.start_repair_daemon(period=0.01, objs_per_cycle=2, max_cycles=3,
+                            order="rr", auto_retarget=False)
+    dss.net.run()
+    t_star = max(
+        t for t, e in dss.net.servers["s1"].ec[("f", 0)].items() if e is not None
+    )
+    assert dss.net.servers["s0"].ec[("f", 0)].get(t_star) is not None
+
+
+def test_repair_daemon_auto_retargets_after_recon():
+    """The daemon follows a reconfiguration it observes (recon-finalization
+    callback) without anyone calling ``retarget`` — and heals a server of
+    the NEW configuration that missed the transfer."""
+    dss = DSS(DSSParams(algorithm="coaresec", n_servers=6, parity_m=4, seed=35,
+                        recon_repair=False))
+    w = dss.client("w")
+    dss.net.run_op(w.update("f", _blob(74, 3000)), client="w")
+    daemon = dss.start_repair_daemon(period=0.02, objs_per_cycle=2)
+    assert daemon.cfg_idx == 0
+    dss.crash_servers(["s5"])
+    cfg1 = dss.make_config()  # same server set, new configuration index 1
+    g = dss.client("g")
+    fut = dss.net.spawn(g.recon("f", cfg1), client="g")
+    dss.net.schedule(0.05, lambda: dss.net.recover("s5"))
+    dss.net.run(until=dss.net.now + 0.5)
+    assert fut.done
+    assert daemon.cfg_idx == 1 and daemon.config.cfg_id == cfg1.cfg_id
+    assert daemon.stats["retargets"] == 1
+    dss.net.run(until=dss.net.now + 0.5)
+    dss.stop_repair_daemon()
+    dss.net.run()
+    t_star = max(
+        t for t, e in dss.net.servers["s0"].ec[("f", 1)].items() if e is not None
+    )
+    assert t_star > TAG0
+    assert dss.net.servers["s5"].ec[("f", 1)].get(t_star) is not None, (
+        "auto-retargeted daemon must heal the new configuration"
+    )
+    check_all(dss.history)
+
+
+# ------------------------------------------------------ review regressions
+def _legacy_genesis(dss, w, fid):
+    """Rewrite a file's genesis to the pre-unification raw-count schema."""
+    from repro.core.fragment import decode_block_value, encode_block_value
+
+    g = genesis_id(fid)
+    wdsm = w.fm.dsm if hasattr(w, "fm") else w.handle.fm.dsm
+    _t, graw = dss.net.run_op(wdsm.cvr_read(g), client="w")
+    head, _meta = decode_block_value(graw)
+    legacy = encode_block_value(head, (99).to_bytes(4, "big"))
+    (_tag, _v), flag = dss.net.run_op(wdsm.cvr_write(g, legacy), client="w")
+    assert flag == "chg"
+
+
+@pytest.mark.parametrize("via_batch", [False, True])
+def test_indexed_update_upgrades_legacy_genesis(via_batch):
+    """Regression: an indexed update of a legacy count-only-genesis file that
+    keeps the block index UNCHANGED must still upgrade the genesis to the
+    indexed schema — its data blocks are rewritten with ptr=None, so leaving
+    the legacy genesis in place would sever the chain (silent truncation)."""
+    dss = _dss(indexed=False, seed=51)
+    w = dss.client("w")
+    blob = _blob(80, 16_000)
+    assert dss.net.run_op(w.update("f", blob), client="w")["success"]
+    _legacy_genesis(dss, w, "f")
+    # in-place one-byte flip in the middle of a block: CDC boundaries (and
+    # hence block ids / the index) stay identical
+    edit = bytearray(blob)
+    edit[8_000] ^= 0xFF
+    edit = bytes(edit)
+    dss2 = dss  # same store, new INDEXED client
+    from repro.core.fragment import FragmentationModule
+    from repro.core.coares import CoAresClient
+
+    dsm = CoAresClient(dss2.net, "iw", dss2.c0, history=dss2.history)
+    fm = FragmentationModule(dss2.net, dsm, min_block=256, avg_block=512,
+                             max_block=2048, history=dss2.history, indexed=True)
+    if via_batch:
+        stats = dss2.net.run_op(fm.fm_update_batch({"f": edit}), client="iw")["f"]
+    else:
+        stats = dss2.net.run_op(fm.fm_update("f", edit), client="iw")
+    assert stats["success"]
+    # the genesis must now carry the INDEXED schema (upgraded), so indexed
+    # readers — single-file and batched — see the full edited content
+    # (indexed writes null block pointers, so a leftover legacy genesis
+    # would force the walk fallback and silently truncate the read)
+    rfm = FragmentationModule(
+        dss2.net, CoAresClient(dss2.net, "ri", dss2.c0, history=dss2.history),
+        min_block=256, avg_block=512, max_block=2048,
+        history=dss2.history, indexed=True,
+    )
+    got, blocks = dss2.net.run_op(rfm.fm_read("f"), client="ri")
+    assert got == edit, "legacy-genesis update truncated the file"
+    assert all(nxt is None for _b, nxt, _d in blocks) or len(blocks) > 1
+    s2 = dss2.session("ri2")
+    s2.handle.fm.indexed = True
+    assert s2.read("f").result() == edit
+
+
+def test_opfuture_result_raises_instead_of_spinning():
+    """Regression: with an unbounded daemon keeping the event queue busy and
+    a lost quorum, result() must hit its event budget and raise — not spin
+    forever (Network.run has the same backstop)."""
+    from repro.core.api import OpFuture
+
+    dss = _dss(n=6, m=2, seed=53, indexed=True)
+    s = dss.session("w")
+    s.write("f", _blob(90, 2000)).result()
+    dss.start_repair_daemon(period=0.001)
+    dss.crash_servers([f"s{i}" for i in range(4)])  # beyond the fault budget
+    fut = s.read("f")
+    old = OpFuture.MAX_EVENTS
+    OpFuture.MAX_EVENTS = 20_000
+    try:
+        with pytest.raises(RuntimeError, match="did not terminate"):
+            fut.result()
+    finally:
+        OpFuture.MAX_EVENTS = old
+        dss.stop_repair_daemon()
+
+
+def test_repair_daemon_keeps_covering_unreconfigured_objects():
+    """Review regression: after a PARTIAL recon (one object moved to cfg 1,
+    another left on cfg 0) the auto-retargeting daemon must keep repairing
+    the object still on the old configuration — coverage is additive."""
+    dss = DSS(DSSParams(algorithm="coaresec", n_servers=6, parity_m=4, seed=61,
+                        recon_repair=False))
+    w = dss.client("w")
+    dss.net.run_op(w.update("a", _blob(76, 2000)), client="w")
+    dss.net.run_op(w.update("b", _blob(77, 2000)), client="w")
+    dss.net.run()
+    daemon = dss.start_repair_daemon(period=0.02, objs_per_cycle=4)
+    cfg1 = dss.make_config()
+    fut = dss.net.spawn(dss.client("g").recon("a", cfg1), client="g")
+    dss.net.run(until=dss.net.now + 0.3)
+    assert fut.done and daemon.cfg_idx == 1
+    assert daemon.covered_indices() == [0, 1], "old config must stay covered"
+    # damage 'b' (still at cfg 0): drop its newest fragments on two servers
+    for sid in ("s0", "s1"):
+        lst = dss.net.servers[sid].ec[("b", 0)]
+        t_star = max(t for t, e in lst.items() if e is not None)
+        del lst[t_star]
+    dss.net.run(until=dss.net.now + 0.3)
+    dss.stop_repair_daemon()
+    dss.net.run()
+    t_star = max(
+        t for t, e in dss.net.servers["s2"].ec[("b", 0)].items() if e is not None
+    )
+    for sid in ("s0", "s1"):
+        assert dss.net.servers[sid].ec[("b", 0)].get(t_star) is not None, (
+            f"{sid}: object left on the old configuration was abandoned"
+        )
+
+
+def test_daemon_covers_different_configs_at_same_index_and_prunes():
+    """Review regression: two files reconfigured to DIFFERENT configurations
+    at the same sequence index must BOTH stay covered (targets are keyed by
+    index AND config id), and a target whose objects all moved to finalized
+    successors is pruned so probe traffic stays bounded."""
+    dss = DSS(DSSParams(algorithm="coaresec", n_servers=8, parity_m=6, seed=67,
+                        recon_repair=False))
+    w = dss.client("w")
+    dss.net.run_op(w.update("a", _blob(81, 1500)), client="w")
+    dss.net.run_op(w.update("b", _blob(82, 1500)), client="w")
+    dss.net.run()
+    daemon = dss.start_repair_daemon(period=0.02, objs_per_cycle=4)
+    cfg_x = dss.make_config(n_servers=6)          # s0..s5
+    cfg_y = dss.make_config(n_servers=8)          # s0..s7
+    g = dss.client("g")
+    f1 = dss.net.spawn(g.recon("a", cfg_x), client="g")
+    f2 = dss.net.spawn(g.recon("b", cfg_y), client="g")
+    dss.net.run(until=dss.net.now + 0.3)
+    assert f1.done and f2.done
+    assert len([k for k in daemon.targets if k[0] == 1]) == 2, daemon.targets
+    # damage 'b' under cfg_y: the daemon must find it via cfg_y's probe
+    lst = dss.net.servers["s6"].ec[("b", 1)]
+    t_star = max(t for t, e in lst.items() if e is not None)
+    del lst[t_star]
+    dss.net.run(until=dss.net.now + 0.4)
+    assert dss.net.servers["s6"].ec[("b", 1)].get(t_star) is not None, (
+        "same-index second configuration was not covered"
+    )
+    # cfg 0 holds only superseded state now -> its target gets pruned
+    dss.net.run(until=dss.net.now + 0.2)
+    dss.stop_repair_daemon()
+    dss.net.run()
+    assert daemon.stats["pruned"] >= 1, daemon.stats
+    assert 0 not in daemon.covered_indices(), daemon.targets
+
+
+def test_probe_health_reports_unreadable_not_healthy():
+    """Review regression: data that WAS written but no longer reaches k live
+    holders must report a negative margin + unreadable, never full health."""
+    dss = DSS(DSSParams(algorithm="coaresec", n_servers=6, parity_m=4, seed=63))
+    s = dss.session("w")
+    s.write("f", _blob(78, 2000)).result()
+    dss.net.run()
+    # destroy all but one live copy of every real tag (k=2 -> undecodable)
+    for sid in [f"s{i}" for i in range(1, 6)]:
+        lst = dss.net.servers[sid].ec[("f", 0)]
+        for t in [t for t in lst if t > TAG0]:
+            del lst[t]
+    st = s.stat("f").result()
+    assert st["unreadable"] is True
+    assert st["margin"] == 1 - 2, st  # one holder, k=2 -> margin -1
+    # the margin-ordered daemon must NOT spin on it (nothing rebuildable)
+    daemon = dss.start_repair_daemon(period=0.01, max_cycles=3)
+    dss.net.run()
+    assert daemon.stats["objects"] == 0, "unrepairable object must be skipped"
+
+
+def test_stale_daemon_subscription_is_inert():
+    """Review regression: a daemon that finished via max_cycles must ignore
+    recon notifications, and starting a replacement unsubscribes it."""
+    dss = DSS(DSSParams(algorithm="coaresec", n_servers=6, parity_m=4, seed=65,
+                        recon_repair=False))
+    w = dss.client("w")
+    dss.net.run_op(w.update("f", _blob(79, 1000)), client="w")
+    d1 = dss.start_repair_daemon(period=0.005, max_cycles=1)
+    dss.net.run()
+    assert d1._fut.done
+    cfg1 = dss.make_config()
+    dss.net.run_op(dss.client("g").recon("f", cfg1), client="g")
+    assert d1.stats["retargets"] == 0 and d1.covered_indices() == [0], (
+        "completed daemon must not be retargeted by stale notifications"
+    )
+    d2 = dss.start_repair_daemon(period=0.005, max_cycles=1, client_id="d2")
+    assert d1.observe_recon not in dss._recon_subs
+    assert d2.observe_recon in dss._recon_subs
+    dss.net.run()
+
+
+def test_repair_daemon_idles_on_abd_config_after_retarget():
+    dss = DSS(DSSParams(algorithm="coaresec", n_servers=6, parity_m=4, seed=37,
+                        recon_repair=False))
+    w = dss.client("w")
+    dss.net.run_op(w.update("f", _blob(75, 1000)), client="w")
+    daemon = dss.start_repair_daemon(period=0.02)
+    cfg1 = dss.make_config(dap="abd")
+    fut = dss.net.spawn(dss.client("g").recon("f", cfg1), client="g")
+    dss.net.run(until=dss.net.now + 0.2)
+    assert fut.done
+    assert daemon.config.dap == "abd"  # followed the flip, idling safely
+    dss.stop_repair_daemon()
+    dss.net.run()

@@ -1,6 +1,5 @@
 """Per-architecture smoke tests: REDUCED configs, one forward/train step and
 one decode step on CPU (1 device), asserting output shapes + no NaNs."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

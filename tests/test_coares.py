@@ -1,10 +1,8 @@
 """CoARES (Alg 1) behaviour: coverability, DAP Property 1, reconfiguration."""
-import numpy as np
 import pytest
 
-from checkers import check_all, check_atomicity, check_coverability
-from repro.core import DSS, DSSParams, TAG0
-from repro.core.store import ALGORITHMS
+from checkers import check_all
+from repro.core import DSS, DSSParams
 
 WHOLE_ALGS = ["coabd", "coaresabd", "coaresec", "coaresec-noopt"]
 

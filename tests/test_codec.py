@@ -1,0 +1,152 @@
+"""Wire codec (ISSUE 3): round-trip identity, size accounting, fallback.
+
+Property-based via hypothesis when installed, the seeded shim otherwise
+(tests/_propfallback.py) — same pattern as the DAP property suites.
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # seeded fallback shim — see tests/_propfallback.py
+    from _propfallback import given, settings
+    from _propfallback import strategies as st
+
+from repro.core.tags import TAG0, Config
+from repro.net import codec
+from repro.net.sim import RPC, LatencyModel, Network, Server, msg_wire_size, nbytes
+
+
+def _rt(msg):
+    frame = codec.encode_frame(msg)
+    assert codec.wire_size(msg) == len(frame), msg
+    got = codec.decode_frame(frame)
+    assert got == msg, (got, msg)
+    return len(frame)
+
+
+# ------------------------------------------------------------ protocol msgs
+CFG = Config("c1", ("s0", "s1", "s2", "s3", "s4"), dap="ec_opt", k=3, delta=8)
+
+
+def test_roundtrip_protocol_messages():
+    """Every message shape the storage servers actually exchange."""
+    tag = (3, "w0")
+    elem = (b"\x00\x01" * 40, 77)
+    msgs = [
+        ("abd-get", "obj", 0, tag),
+        ("abd-val", tag, None),
+        ("abd-get-batch", (("a", tag), ("b", TAG0)), 0),
+        ("ec-query-batch", (("a", tag), ("b", None)), 1),
+        ("ec-list", [(tag, elem), ((4, "w1"), None)]),
+        ("ec-put", "obj", 0, tag, elem, 8),
+        ("ec-put-batch", (("a", tag, elem),), 0, 8),
+        ("read-next-batch", (("a", 0), ("b", 2))),
+        ("next-c", (CFG, "P")),
+        ("next-c-batch", ((CFG, "F"), None)),
+        ("write-next-batch", (("a", 0, CFG, "P"),)),
+        ("cons-p1-batch", ("a", "b"), 0, (2, "g")),
+        ("p1-ok", None, None),
+        ("p1-batch", (("p1-ok", (1, "g"), CFG), ("p1-nack", (3, "h")))),
+        ("cons-p2-batch", (("a", CFG),), 0, (2, "g")),
+        ("margin-batch", ("a", "b"), 0),
+        ("margin-batch", ((tag, ((tag, True), (TAG0, False)), "F"),
+                          (None, None, None))),
+        ("ec-repair-pull", "obj", 0),
+        ("ec-repair-list", [(tag, elem), (TAG0, None)]),
+        ("ack", 3),
+    ]
+    for m in msgs:
+        _rt(m)
+
+
+def test_roundtrip_scalars_and_containers():
+    for m in (None, True, False, 0, -1, 127, -128, 2**70, -(2**70), 0.0, -2.5,
+              "", "héllo", b"", b"\xff" * 300, (), (1, (2, (3,))), [],
+              [1, "x", None], {"k": b"v", ("t", 1): [True]}, CFG):
+        _rt(m)
+
+
+def test_roundtrip_ndarray():
+    a = np.arange(24, dtype=np.uint8).reshape(2, 3, 4)
+    frame = codec.encode_frame(a)
+    assert codec.wire_size(a) == len(frame)
+    got = codec.decode_frame(frame)
+    assert got.dtype == a.dtype and got.shape == a.shape and (got == a).all()
+
+
+def test_length_prefix_framing():
+    """The frame really is uvarint(len(body)) || body."""
+    frame = codec.encode_frame(b"x" * 200)
+    n, pos = codec._read_uvarint(frame, 0)
+    assert n == len(frame) - pos
+    assert codec.decode(frame[pos:]) == b"x" * 200
+    # big payloads cost ~len + framing, not the old 16-per-tuple heuristic
+    payload = ("ec-put", "o", 0, (1, "w"), (b"z" * 10_000, 10_000), 8)
+    assert abs(codec.wire_size(payload) - 10_000) < 100
+
+
+def test_memoryview_wire_size_counts_bytes_not_elements():
+    """Regression: len() of a non-byte-format memoryview counts ELEMENTS;
+    wire_size must match the encoded byte length."""
+    import array
+
+    mv = memoryview(array.array("H", [1, 2, 3, 4]))  # 4 elements, 8 bytes
+    assert codec.wire_size(mv) == len(codec.encode_frame(mv))
+    assert codec.decode_frame(codec.encode_frame(mv)) == bytes(mv)
+
+
+def test_unencodable_raises_and_try_returns_none():
+    class Weird:
+        pass
+
+    import pytest
+
+    with pytest.raises(codec.CodecError):
+        codec.encode(Weird())
+    assert codec.try_wire_size(Weird()) is None
+    assert codec.try_wire_size({1, 2}) is None  # sets are outside the vocab
+    # and the sim falls back to the nbytes heuristic for those
+    assert msg_wire_size(Weird()) == nbytes(Weird())
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(min_value=-(2**40), max_value=2**40),
+            st.binary(min_size=0, max_size=64),
+            st.sampled_from(["a", "", "héllo", "s0"]),
+        ),
+        min_size=0,
+        max_size=6,
+    )
+)
+def test_roundtrip_property(tree):
+    """Random nested (int, bytes, str) trees round-trip exactly and
+    wire_size always equals the materialised frame length."""
+    msg = ("env", tuple(tree), {"n": len(tree)}, [TAG0, None, True])
+    _rt(msg)
+
+
+# ---------------------------------------------------- network integration
+class Echo(Server):
+    def handle(self, sender, msg):
+        return ("echo", msg)
+
+
+def test_network_charges_framed_bytes():
+    """bytes_sent now counts codec frames: a request/reply pair's cost is
+    the two frame lengths, not the python-structure heuristic."""
+    net = Network(seed=0, latency=LatencyModel())
+    net.add_server(Echo("s0"))
+    msg = ("ec-put", "obj", 0, (1, "w"), (b"q" * 1000, 1000), 8)
+
+    def op():
+        yield RPC(dests=("s0",), msg=msg, need=1)
+        return None
+
+    net.run_op(op(), client="c")
+    expect = codec.wire_size(msg) + codec.wire_size(("echo", msg))
+    assert net.bytes_sent == expect
+    assert net.client_totals("c") == (1, 2, expect)

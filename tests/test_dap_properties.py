@@ -1,7 +1,6 @@
 """Property-based validation of DAP Property 1 (C1/C2) under random
 concurrent schedules — the safety contract every ARES variant depends on."""
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st

@@ -16,7 +16,6 @@ from repro.erasure import (
     gf_invert_matrix,
     gf_matmul_np,
     gf_mul,
-    gf_mul_np,
     rows_to_bytes,
     vandermonde_matrix,
 )

@@ -1,7 +1,6 @@
 """Unit tests for the scan-weighted HLO analyzer (roofline/hlo_parse.py)."""
-import numpy as np
 
-from repro.roofline.analysis import roofline_report, V5E
+from repro.roofline.analysis import roofline_report
 from repro.roofline.hlo_parse import _shape_bytes, analyze, parse_blocks
 
 HLO = """\

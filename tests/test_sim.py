@@ -1,6 +1,5 @@
 """Network simulator behaviour tests."""
 import numpy as np
-import pytest
 
 from repro.net.sim import RPC, LatencyModel, Network, Server, Sleep, nbytes
 

@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch
-from repro.configs.base import ShapeConfig
 from repro.models.registry import build_model
 from repro.train.data import DataConfig, SyntheticLM
 from repro.train.optimizer import AdamWConfig, adamw_init

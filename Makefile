@@ -7,7 +7,10 @@
 #   make bench-repair  durability-restoration / interference benchmark
 #   make bench-readpath  batched vs per-object read-path benchmark
 #   make bench-multifile cross-file Session fan-out vs legacy per-file ops
-#   make bench-smoke   every benchmark harness at its smallest point (CI)
+#   make bench-gateway cross-client gateway merge vs direct per-client path
+#   make bench-smoke   every benchmark harness at its smallest point (CI);
+#                      FAILS if quorum-round counts regress versus
+#                      benchmarks/smoke_baseline.json (per-metric tolerance)
 #   make lint          ruff check (the CI lint job; pip install ruff)
 #   make dev-deps      install optional dev extras (real hypothesis, ruff)
 #
@@ -16,7 +19,7 @@
 PY ?= python
 
 .PHONY: test tier1 repair-tests batch-tests bench-repair bench-readpath \
-        bench-multifile bench-smoke lint dev-deps
+        bench-multifile bench-gateway bench-smoke lint dev-deps
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -38,8 +41,11 @@ bench-readpath:
 bench-multifile:
 	PYTHONPATH=src $(PY) benchmarks/bench_multifile.py
 
+bench-gateway:
+	PYTHONPATH=src $(PY) benchmarks/bench_gateway.py
+
 bench-smoke:
-	PYTHONPATH=src $(PY) -m benchmarks.smoke
+	PYTHONPATH=src $(PY) -m benchmarks.smoke --baseline benchmarks/smoke_baseline.json
 
 lint:
 	ruff check src benchmarks examples tests

@@ -1,0 +1,154 @@
+"""ISSUE 4 acceptance — cross-client gateway aggregation.
+
+A C-client same-file read fan-out under ``coaresecf`` with
+``indexed=True, batched=True``:
+
+* ``gateway`` — every client session attaches to one Gateway
+  (``dss.session(cid, via=gw)``): all C reads of the hot file land in one
+  gateway window, dedupe to ONE entry of a merged batch, and cost ONE
+  quorum fan-out — total quorum rounds are FLAT in C (the result is
+  multicast back and each rider's OpStats shows the shared round once).
+* ``direct``  — the per-client ablation baseline: C detached sessions,
+  each its own network endpoint, each paying its own fan-out. Quorum
+  rounds scale O(C).
+
+A second phase does the same for a C-client **mixed-file** fan-out (each
+client reads one of two hot files) — the merge still collapses C client
+fan-outs into one two-file batched round.
+
+The gossip trial demonstrates the tier's second job: a RepairDaemon with
+NO local recon callback (``auto_retarget=False``) registered with the
+gateway acquires coverage of a configuration someone else installed (via
+the codec-framed ``gossip-configs`` anti-entropy round) and repairs a
+damaged fragment of it.
+
+    PYTHONPATH=src python benchmarks/bench_gateway.py
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+from benchmarks.common import make_dss
+from repro.core.api import gather
+
+C_LIST = (1, 2, 4, 8, 16)
+FILE_SIZE = 1 << 16                       # 64 KiB, ~8 blocks per file
+BLOCK = (1 << 12, 1 << 13, 1 << 15)
+N_SERVERS = 11
+PARITY = 5
+HOT_FILES = ("hot0", "hot1")
+
+
+def _setup(seed: int):
+    dss = make_dss("coaresecf", n_servers=N_SERVERS, parity=PARITY, seed=seed,
+                   block=BLOCK, indexed=True, batched=True)
+    rng = np.random.default_rng(seed)
+    docs = {f: rng.integers(0, 256, FILE_SIZE, dtype=np.uint8).tobytes()
+            for f in HOT_FILES}
+    boot = dss.session("boot")
+    assert all(s["success"] for s in gather(*[boot.write(f, d)
+                                              for f, d in docs.items()]))
+    dss.net.run()
+    return dss, docs
+
+
+def _one(C: int, mode: str, seed: int = 83) -> list[dict]:
+    """One same-file and one mixed-file C-client read fan-out; two rows."""
+    dss, docs = _setup(seed)
+    gw = dss.gateway() if mode == "gateway" else None
+    rows = []
+    for phase in ("same-file", "mixed"):
+        cid = f"{mode[0]}{phase[0]}{C}"
+        sessions = [
+            dss.session(f"{cid}_{i}", via=gw) if gw is not None
+            else dss.session(f"{cid}_{i}")
+            for i in range(C)
+        ]
+        targets = (
+            [HOT_FILES[0]] * C if phase == "same-file"
+            else [HOT_FILES[i % len(HOT_FILES)] for i in range(C)]
+        )
+        r0, m0, b0 = dss.net.rpc_rounds, dss.net.msg_count, dss.net.bytes_sent
+        t0 = dss.net.now
+        futs = [s.read(f) for s, f in zip(sessions, targets)]
+        results = gather(*futs)
+        assert results == [docs[f] for f in targets], "fan-out corrupted"
+        rows.append({
+            "bench": "gateway", "mode": mode, "phase": phase, "clients": C,
+            "quorum_rounds": dss.net.rpc_rounds - r0,
+            "msg_count": dss.net.msg_count - m0,
+            "MB_sent": (dss.net.bytes_sent - b0) / 1e6,
+            "fanout_ms": (dss.net.now - t0) * 1e3,
+        })
+    if gw is not None:
+        gw.stop()
+    return rows
+
+
+def _gossip_trial(seed: int = 89) -> dict:
+    """Config dissemination: a callback-less daemon learns a config through
+    gateway gossip and restores a lost fragment of it."""
+    dss = make_dss("coaresec", n_servers=6, parity=4, seed=seed, block=BLOCK)
+    doc = np.random.default_rng(seed).integers(
+        0, 256, 1 << 12, dtype=np.uint8).tobytes()
+    dss.net.run_op(dss.client("w").update("f", doc), client="w")
+    dss.net.run()
+    gw = dss.gateway()
+    daemon = dss.start_repair_daemon(period=0.01, objs_per_cycle=2,
+                                     auto_retarget=False)
+    gw.register_daemon(daemon)
+    cfg1 = dss.make_config()
+    fut = dss.net.spawn(dss.client("g").recon("f", cfg1), client="g")
+    dss.net.run(until=dss.net.now + 0.2)
+    assert fut.done and (1, cfg1.cfg_id) in daemon.targets, (
+        "daemon must acquire the gossiped configuration"
+    )
+    lst = dss.net.servers["s3"].ec[("f", 1)]
+    t_star = max(t for t, e in lst.items() if e is not None)
+    del lst[t_star]
+    t_damage = dss.net.now
+    dss.net.run(until=dss.net.now + 0.3)
+    dss.stop_repair_daemon()
+    gw.stop()
+    dss.net.run()
+    assert dss.net.servers["s3"].ec[("f", 1)].get(t_star) is not None, (
+        "gossip-covered configuration was not repaired"
+    )
+    restored = [r for r in dss.history
+                if r.kind == "repair" and r.start >= t_damage
+                and (r.extra or {}).get("applied", 0) > 0]
+    return {
+        "bench": "gateway_gossip",
+        "gossip_applied": daemon.stats["gossip"],
+        "repair_ms": (restored[0].end - t_damage) * 1e3 if restored else None,
+        "repaired": True,
+    }
+
+
+def run() -> list[dict]:
+    rows = []
+    for C in C_LIST:
+        for mode in ("direct", "gateway"):
+            rows.extend(_one(C, mode))
+    # headline checks: merged same-file fan-out rounds are flat in C,
+    # the direct ablation scales with C
+    by_key = {(r["mode"], r["phase"], r["clients"]): r["quorum_rounds"]
+              for r in rows}
+    for phase in ("same-file", "mixed"):
+        flat = {c: by_key[("gateway", phase, c)] for c in C_LIST}
+        assert len(set(flat.values())) == 1, f"gateway {phase} not O(1): {flat}"
+    assert by_key[("direct", "same-file", C_LIST[-1])] >= (
+        C_LIST[-1] * by_key[("direct", "same-file", 1)]
+    ), "direct path should scale O(C)"
+    rows.append(_gossip_trial())
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

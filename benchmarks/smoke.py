@@ -87,6 +87,28 @@ def run() -> list[dict]:
     for mode in ("legacy", "session"):
         rows.extend(multifile_one(2, mode))
 
+    # --- gateway family (ISSUE 4): 3-client same-file merge + gossip -------
+    dss = make_dss("coaresecf", n_servers=5, parity=1, seed=50, block=BLOCK,
+                   indexed=True)
+    doc = np.random.default_rng(51).integers(0, 256, SIZE, dtype=np.uint8).tobytes()
+    assert dss.session("boot").write("hot", doc).result()["success"]
+    gw = dss.gateway()
+    riders = [dss.session(f"c{i}", via=gw) for i in range(3)]
+    r0 = dss.net.rpc_rounds
+    futs = [s.read("hot") for s in riders]
+    from repro.core.api import gather
+
+    assert gather(*futs) == [doc] * 3
+    gw.stop()
+    rows.append({"bench": "smoke_gateway", "clients": 3,
+                 "read_rounds": dss.net.rpc_rounds - r0,
+                 "dedup_saved": gw.stats["dedup_saved"],
+                 "batched_with": futs[0].stats.batched_with})
+
+    from benchmarks.bench_gateway import _gossip_trial
+
+    rows.append({**_gossip_trial(seed=52), "bench": "smoke_gossip"})
+
     # --- repair family: one crash/recover/repair trial ---------------------
     from benchmarks.bench_repair import _one_trial
 
@@ -118,10 +140,46 @@ def run() -> list[dict]:
     return rows
 
 
+def check_baseline(rows: list[dict], baseline_path) -> list[str]:
+    """Regression gate (ISSUE 4 satellite): compare the smoke rows against
+    the checked-in quorum-round baseline. Each baseline metric names a
+    ``bench`` (plus optional ``match`` row filters), a row ``field``, the
+    expected ``baseline`` value and a per-metric ``tolerance``; a matching
+    row whose value exceeds ``baseline + tolerance`` — or a metric whose
+    rows disappeared — is a failure. Values well UNDER baseline are only
+    reported (an improvement should be locked in by re-baselining)."""
+    spec = json.loads(Path(baseline_path).read_text())
+    failures: list[str] = []
+    for m in spec["metrics"]:
+        want = {"bench": m["bench"], **m.get("match", {})}
+        matching = [r for r in rows
+                    if all(r.get(k) == v for k, v in want.items())]
+        if not matching:
+            failures.append(f"{want}: no smoke row matches this metric")
+            continue
+        for row in matching:
+            got = row.get(m["field"])
+            if got is None:
+                failures.append(f"{want}: row lacks field {m['field']!r}")
+            elif got > m["baseline"] + m["tolerance"]:
+                failures.append(
+                    f"{want} {m['field']}={got} regressed past "
+                    f"baseline {m['baseline']} (+{m['tolerance']} tolerance)"
+                )
+            elif got < m["baseline"] - m["tolerance"]:
+                print(f"smoke: {want} {m['field']}={got} improved on "
+                      f"baseline {m['baseline']} — consider re-baselining",
+                      file=sys.stderr)
+    return failures
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the rows as a JSON array (CI artifact)")
+    ap.add_argument("--baseline", metavar="PATH", default=None,
+                    help="fail if quorum-round metrics regress versus this "
+                         "checked-in baseline (benchmarks/smoke_baseline.json)")
     args = ap.parse_args()
     rows = run()
     for r in rows:
@@ -131,4 +189,11 @@ if __name__ == "__main__":
         out.parent.mkdir(parents=True, exist_ok=True)
         out.write_text(json.dumps(rows, indent=2, default=str))
         print(f"smoke: wrote {len(rows)} rows to {out}", file=sys.stderr)
+    if args.baseline:
+        failures = check_baseline(rows, args.baseline)
+        if failures:
+            for f in failures:
+                print(f"smoke: REGRESSION: {f}", file=sys.stderr)
+            sys.exit(1)
+        print(f"smoke: baseline check passed ({args.baseline})", file=sys.stderr)
     print("smoke: all benchmark harnesses ran", file=sys.stderr)

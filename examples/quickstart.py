@@ -55,7 +55,7 @@ print(f"crash: s7 down, read still OK (EC quorum), "
 # --- live reconfiguration to a fresh server set + ABD DAP --------------------
 admin = dss.session("admin")
 new_cfg = dss.make_config(dap="abd", n_servers=5, fresh_servers=True)
-nblocks = admin.recon("report0.bin", new_cfg).result()
+nblocks = admin.recon("report0.bin", new_cfg).result()["blocks"]
 print(f"recon: migrated {nblocks} blocks to 5 fresh servers under ABD "
       f"(service stayed readable throughout)")
 assert bob.read("report0.bin").result() == bytes(edit)

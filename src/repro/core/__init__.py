@@ -3,6 +3,7 @@ plus the beyond-paper self-healing repair subsystem (``repro.core.repair``)
 and the Session/future client API (``repro.core.api``)."""
 from repro.core.api import OpStats, Session, Workload, gather
 from repro.core.coares import CoAresClient, StaticCoverableClient
+from repro.core.gateway import Gateway, GossipListener
 from repro.core.fragment import (
     FragmentationModule,
     decode_block_value,
@@ -18,6 +19,8 @@ from repro.core.tags import TAG0, Config, CSeqEntry, OpRecord, Tag, next_tag
 
 __all__ = [
     "Session",
+    "Gateway",
+    "GossipListener",
     "Workload",
     "OpStats",
     "gather",

@@ -130,6 +130,39 @@ class _Intent:
     fut: OpFuture
 
 
+def _dispatch_group(handle, group: list[_Intent]) -> Generator:
+    """Issue ONE merged batch operation for a same-kind intent group and
+    return ``(payload, blocks)`` — ``payload[fid]`` is what each future
+    resolves to, ``blocks[fid]`` feeds ``OpStats.blocks``. Shared by the
+    Session scheduler and the gateway tier so the per-kind payload shapes
+    can never diverge between the direct and aggregated paths. Repeated
+    fids (a gateway merging same-file intents from several clients)
+    dedupe here; the result is multicast by resolving every intent from
+    the one payload entry."""
+    kind = group[0].kind
+    fids = list(dict.fromkeys(it.fid for it in group))
+    if kind == "read":
+        res = yield from handle.read_batch(fids)
+        return ({f: content for f, (content, _n) in res.items()},
+                {f: n for f, (_c, n) in res.items()})
+    if kind == "write":
+        res = yield from handle.update_batch({it.fid: it.arg for it in group})
+        return res, {f: s["blocks"] for f, s in res.items()}
+    if kind == "recon":
+        # recon futures resolve to a real result dict; the raw {fid: n}
+        # map feeds OpStats.blocks only (it used to be BOTH the payload
+        # and the stats source, so the future's "result" was a bare
+        # aliased int — ISSUE 4)
+        res = yield from handle.recon_batch(fids, group[0].arg)
+        payload = {
+            f: {"blocks": n, "config": group[0].arg.cfg_id, "success": True}
+            for f, n in res.items()
+        }
+        return payload, dict(res)
+    res = yield from handle.stat_batch(fids)  # stat
+    return res, {f: s["blocks"] for f, s in res.items()}
+
+
 class Session:
     """Per-client handle of the submit/future API.
 
@@ -138,14 +171,27 @@ class Session:
     multi-file batch. The default (0.5 ms virtual) sits under the sim's base
     RTT, so batching never costs a visible latency hit; ``window=0.0``
     still coalesces ops submitted back-to-back from ordinary Python code
-    (virtual time only advances inside ``net.run``/``step``)."""
+    (virtual time only advances inside ``net.run``/``step``).
 
-    def __init__(self, dss, cid: str, *, window: float = 0.5e-3):
+    ``via`` attaches the session to a :class:`repro.core.gateway.Gateway`
+    (ISSUE 4): convenience ops are then forwarded to the gateway, which
+    coalesces them with in-flight intents from OTHER clients and issues one
+    merged storage round on everyone's behalf (same-file reads from C
+    clients dedupe to a single quorum fan-out). Raw ``submit`` ops always
+    run directly under this session's own endpoint."""
+
+    def __init__(self, dss, cid: str, *, window: float = 0.5e-3, via=None):
         self.dss = dss
         self.cid = cid
         self.net = dss.net
         self.handle = dss.client(cid)
         self.window = window
+        self.via = via
+        if via is not None and via.net is not self.net:
+            raise ValueError(
+                f"gateway {via.gid!r} lives on a different Network than "
+                f"session {cid!r}"
+            )
         self._pending: list[_Intent] = []
         self._drain_scheduled = False
 
@@ -197,6 +243,9 @@ class Session:
 
     def _enqueue(self, kind: str, fid: str, arg: Any) -> OpFuture:
         fut = OpFuture(self, kind, fid)
+        if self.via is not None:
+            self.via._enqueue(_Intent(kind, fid, arg, fut))
+            return fut
         self._pending.append(_Intent(kind, fid, arg, fut))
         if not self._drain_scheduled:
             self._drain_scheduled = True
@@ -227,48 +276,61 @@ class Session:
         return groups
 
     def _drain(self) -> Generator:
-        self._drain_scheduled = False
-        batch, self._pending = self._pending, []
-        for group in self._groups(batch):
-            kind = group[0].kind
-            fids = [it.fid for it in group]
-            r0, m0, b0 = self.net.client_totals(self.cid)
-            t0 = self.net.now
-            try:
-                if kind == "read":
-                    res = yield from self.handle.read_batch(fids)
-                    payload = {f: content for f, (content, _n) in res.items()}
-                    blocks = {f: n for f, (_c, n) in res.items()}
-                elif kind == "write":
-                    res = yield from self.handle.update_batch(
-                        {it.fid: it.arg for it in group}
+        # NOTE ``_drain_scheduled`` stays armed for the whole drain: an op
+        # enqueued while this generator is mid-flight (e.g. from code
+        # reacting to an earlier future of the same batch) must NOT spawn a
+        # CONCURRENT drain — it would race ahead of this drain's remaining
+        # groups and break per-fid program order. The finally block re-arms
+        # a fresh drain for anything that arrived meanwhile, so mid-flight
+        # enqueues are never stranded either (the old code reset the flag on
+        # entry, opening exactly that reorder/reschedule hazard — ISSUE 4).
+        try:
+            batch, self._pending = self._pending, []
+            for group in self._groups(batch):
+                r0, m0, b0 = self.net.client_totals(self.cid)
+                t0 = self.net.now
+                try:
+                    payload, blocks = yield from _dispatch_group(
+                        self.handle, group
                     )
-                    payload = res
-                    blocks = {f: s["blocks"] for f, s in res.items()}
-                elif kind == "recon":
-                    res = yield from self.handle.recon_batch(fids, group[0].arg)
-                    payload = res
-                    blocks = res
-                else:  # stat
-                    res = yield from self.handle.stat_batch(fids)
-                    payload = res
-                    blocks = {f: s["blocks"] for f, s in res.items()}
-            except Exception as err:  # noqa: BLE001 - delivered via futures
-                stats = self._delta(r0, m0, b0, t0, 0, len(group))
+                except Exception as err:  # noqa: BLE001 - delivered via futures
+                    stats = self._delta(r0, m0, b0, t0, 0, len(group))
+                    for it in group:
+                        it.fut._fail(err, stats)
+                    continue
                 for it in group:
-                    it.fut._fail(err, stats)
-                continue
-            for it in group:
-                it.fut._resolve(
-                    payload[it.fid],
-                    self._delta(r0, m0, b0, t0, blocks[it.fid], len(group)),
+                    it.fut._resolve(
+                        payload[it.fid],
+                        self._delta(r0, m0, b0, t0, blocks[it.fid], len(group)),
+                    )
+        finally:
+            self._drain_scheduled = False
+            if self._pending:
+                self._drain_scheduled = True
+                self.net.spawn(
+                    self._drain(), kind="session-drain", client=self.cid,
+                    delay=self.window,
                 )
         return None
 
 
 def gather(*futures: OpFuture) -> list:
     """Drive the (shared) virtual-time network until every future completes;
-    returns their results in argument order. Raises the first failure."""
+    returns their results in argument order. Raises the first failure.
+
+    Every future must live on the SAME ``Network``: mixing futures of
+    different ``DSS`` instances used to spin one store's event loop waiting
+    for an operation that only the *other* store's loop could ever complete
+    (burning the event budget before failing obscurely) — detected up front
+    now (ISSUE 4)."""
+    nets = {id(f.session.net) for f in futures}
+    if len(nets) > 1:
+        owners = sorted({f"{f.client}:{f.kind}" for f in futures})
+        raise ValueError(
+            "gather() futures span multiple DSS/Network instances "
+            f"({len(nets)} networks across {owners}); gather each store's "
+            "futures separately"
+        )
     return [f.result() for f in futures]
 
 
@@ -284,16 +346,19 @@ class Workload:
         results = wl.run()          # one O(1)-round fan-out per client
     """
 
-    def __init__(self, dss, *, window: float = 0.5e-3):
+    def __init__(self, dss, *, window: float = 0.5e-3, via=None):
         self.dss = dss
         self.window = window
+        self.via = via  # optional Gateway: every session attaches through it
         self._sessions: dict[str, Session] = {}
         self.futures: list[OpFuture] = []
 
     def session(self, cid: str) -> Session:
         s = self._sessions.get(cid)
         if s is None:
-            s = self._sessions[cid] = Session(self.dss, cid, window=self.window)
+            s = self._sessions[cid] = Session(
+                self.dss, cid, window=self.window, via=self.via
+            )
         return s
 
     def _track(self, fut: OpFuture) -> OpFuture:

@@ -389,9 +389,12 @@ class CoAresClient:
             self.net, cfg, cfg_idx,
             client_id=f"{self.client_id}:recon-repair", history=self.history,
         )
+        # charged to its OWN client id: background repair traffic must not
+        # pollute the reconfiguring client's per-op accounting (nor, through
+        # the gateway's attribution map, every rider of a merged recon).
         self.net.spawn(
             rc.scan_and_repair(list(objs)),
-            kind="recon-repair", client=self.client_id,
+            kind="recon-repair", client=f"{self.client_id}:recon-repair",
             delay=self.recon_repair_delay,
         )
 

@@ -225,16 +225,21 @@ class FragmentationModule:
             else:
                 heads[fid] = ptr
         chains: dict[str, list[tuple[str, str | None, bytes]]] = {}
-        if all_blocks:
-            res = yield from self.dsm.cvr_read_batch(all_blocks)
-            for fid, index in index_of.items():
-                blocks = []
-                for bid in index:
-                    tag, raw = res[bid]
-                    self.dsm.version[bid] = tag
-                    nxt, data = decode_block_value(raw)
-                    blocks.append((bid, nxt, data))
-                chains[fid] = blocks
+        # one deduped block round for every indexed file. NB an indexed file
+        # whose index is EMPTY (an empty-content write) must still land in
+        # ``chains`` — gating the whole loop on ``all_blocks`` used to drop
+        # such files from the result entirely (KeyError downstream) whenever
+        # the merged batch carried no data blocks at all (ISSUE 4).
+        all_blocks = list(dict.fromkeys(all_blocks))
+        res = (yield from self.dsm.cvr_read_batch(all_blocks)) if all_blocks else {}
+        for fid, index in index_of.items():
+            blocks = []
+            for bid in index:
+                tag, raw = res[bid]
+                self.dsm.version[bid] = tag
+                nxt, data = decode_block_value(raw)
+                blocks.append((bid, nxt, data))
+            chains[fid] = blocks
         for fid, ptr in heads.items():
             chains[fid] = yield from self._walk_chain(ptr)
         return chains, {fid: fid in index_of for fid in fids}
@@ -603,7 +608,9 @@ class FragmentationModule:
             else:
                 walk_heads[fid] = ptr
         if all_blocks:
-            yield from self.dsm.recon_batch(all_blocks, new_config)
+            yield from self.dsm.recon_batch(
+                list(dict.fromkeys(all_blocks)), new_config
+            )
         for fid, ptr in walk_heads.items():
             nblocks[fid] = 1 + (yield from self._recon_walk(ptr, new_config))
         for fid in fids:

@@ -352,7 +352,12 @@ class RepairDaemon:
         self.order = order
         self.auto_retarget = auto_retarget
         self.stats = {"cycles": 0, "objects": 0, "pushed": 0, "applied": 0,
-                      "probed": 0, "retargets": 0, "pruned": 0}
+                      "probed": 0, "retargets": 0, "pruned": 0, "gossip": 0}
+        # targets pruned as fully superseded stay retired: config gossip
+        # re-advertises old configurations forever (anti-entropy has no
+        # tombstones), and re-ingesting one would start a prune/re-add
+        # tug-of-war every cycle (ISSUE 4).
+        self._retired: set[tuple[int, str]] = set()
         self._stopped = False
         self._cursor = 0
         self._fut = None
@@ -384,6 +389,7 @@ class RepairDaemon:
         from the next cycle on (drops coverage of every other target; use
         ``observe_recon``/auto-retarget to ADD coverage instead)."""
         self.targets = {(cfg_idx, config.cfg_id): config}
+        self._retired.discard((cfg_idx, config.cfg_id))  # explicit owner intent
         self._cursor = 0
 
     def observe_recon(self, config: Config, cfg_idx: int, objs=None) -> None:
@@ -400,9 +406,30 @@ class RepairDaemon:
         if self._fut is not None and self._fut.done:
             return
         key = (cfg_idx, config.cfg_id)
-        if key not in self.targets:
+        if key not in self.targets and key not in self._retired:
             self.targets[key] = config
             self.stats["retargets"] += 1
+
+    def ingest_coverage(self, entries) -> int:
+        """Gossip ingestion (ISSUE 4): ADD every ``(cfg_idx, Config)``
+        coverage entry this daemon has not seen — how a daemon whose local
+        client never ran (or observed) a reconfiguration still learns the
+        configurations it should be repairing. Fed by the gateway tier's
+        anti-entropy loop (``Gateway.register_daemon`` →
+        ``gossip-configs``). Deliberately NOT gated on ``auto_retarget``:
+        gossip is the membership channel that replaces the local recon
+        callback, not an extension of it. Same staleness guards as
+        ``observe_recon``; returns how many entries were new."""
+        if self._stopped or (self._fut is not None and self._fut.done):
+            return 0
+        applied = 0
+        for cfg_idx, config in entries:
+            key = (cfg_idx, config.cfg_id)
+            if key not in self.targets and key not in self._retired:
+                self.targets[key] = config
+                applied += 1
+        self.stats["gossip"] += applied
+        return applied
 
     def _ec_targets(self) -> list[tuple[int, Config]]:
         return [
@@ -447,8 +474,10 @@ class RepairDaemon:
                 h.superseded for h in health.values()
             ):
                 # everything here moved on to a finalized successor: stop
-                # probing this configuration from the next cycle on
+                # probing this configuration from the next cycle on (and
+                # keep it retired — gossip re-advertises it forever)
                 self.targets.pop((idx, cfg.cfg_id), None)
+                self._retired.add((idx, cfg.cfg_id))
                 self.stats["pruned"] += 1
                 continue
             for h in health.values():

@@ -261,11 +261,22 @@ class DSS:
 
     def session(self, cid: str, **kw) -> "Session":
         """Open a :class:`repro.core.api.Session` for client ``cid`` — the
-        submit/future client API (ISSUE 3). Keyword args (e.g. ``window``)
-        pass through to the Session constructor."""
+        submit/future client API (ISSUE 3). Keyword args (e.g. ``window``,
+        ``via=gateway``) pass through to the Session constructor."""
         from repro.core.api import Session
 
         return Session(self, cid, **kw)
+
+    def gateway(self, gid: str = "gw", **kw) -> "Gateway":
+        """Build a cross-client aggregation gateway (ISSUE 4): sessions
+        opened with ``dss.session(cid, via=gw)`` (or ``gw.session(cid)``)
+        have their ops merged with other attached clients' into shared
+        quorum rounds, and registered RepairDaemons receive config coverage
+        via the gateway's gossip loop. Keyword args (``window``,
+        ``gossip_period``) pass through to the Gateway constructor."""
+        from repro.core.gateway import Gateway
+
+        return Gateway(self, gid, **kw)
 
     # --- config construction (recon targets) -----------------------------------
     def make_config(
@@ -288,7 +299,14 @@ class DSS:
                 sids.append(s)
             sids = tuple(sids)
         else:
-            have = sorted(self.net.servers.keys(), key=lambda s: int(s[1:]))
+            # only STORAGE servers are recon targets — the network may also
+            # host gossip-listener endpoints (gateway tier) whose ids don't
+            # follow the ``sN`` scheme and which store no replica state.
+            have = sorted(
+                (s for s, srv in self.net.servers.items()
+                 if isinstance(srv, StorageServer)),
+                key=lambda s: int(s[1:]),
+            )
             while len(have) < n:
                 s = f"s{next(self._extra_servers)}"
                 self.net.add_server(StorageServer(s))

@@ -146,6 +146,9 @@ def _encode_into(obj: Any, out: bytearray) -> None:
         _encode_into(obj.k, out)
         _encode_into(obj.delta, out)
     elif isinstance(obj, np.ndarray):
+        if obj.dtype.hasobject:
+            # pointer bytes would frame (and size) but never round-trip
+            raise CodecError("object-dtype ndarray is not wire-encodable")
         arr = np.ascontiguousarray(obj)
         out += b"a"
         _encode_into(arr.dtype.str, out)
@@ -273,6 +276,8 @@ def _body_size(obj: Any) -> int:
             + _body_size(obj.delta)
         )
     if isinstance(obj, np.ndarray):
+        if obj.dtype.hasobject:
+            raise CodecError("object-dtype ndarray is not wire-encodable")
         n = int(obj.nbytes)
         return (
             1

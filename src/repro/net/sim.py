@@ -51,7 +51,13 @@ def nbytes(obj: Any) -> int:
     if isinstance(obj, (int, float)):
         return 8
     if isinstance(obj, np.ndarray):
-        return 16 + int(obj.nbytes)
+        # An ndarray nested inside an out-of-vocabulary container used to be
+        # charged the legacy ``16 + nbytes`` guess; route it through the
+        # codec's real ndarray framing instead (ISSUE 4) — the codec knows
+        # the exact dtype/shape/payload frame, so containers that mix arrays
+        # with un-frameable objects stop being over-charged per array.
+        size = try_wire_size(obj)
+        return 16 + int(obj.nbytes) if size is None else size
     if isinstance(obj, np.generic):
         return int(obj.nbytes)
     if isinstance(obj, (tuple, list, set, frozenset)):
@@ -180,6 +186,12 @@ class Network:
         # are attributed to the issuing client, so the Session API can report
         # per-operation OpStats under concurrent multi-client workloads.
         self.client_counters: dict[str, list[int]] = {}
+        # attribution map (ISSUE 4): endpoint -> rider clients. While set,
+        # every RPC the endpoint issues ALSO advances each rider's counters —
+        # how a gateway's merged round is attributed to the clients it serves
+        # (each rider sees the shared round once, same semantics as OpStats
+        # sharing under a coalesced Session batch).
+        self.client_attribution: dict[str, tuple[str, ...]] = {}
         # per-endpoint NIC occupancy: (endpoint, "out"|"in") -> busy-until
         self._busy: dict[tuple[str, str], float] = {}
 
@@ -229,6 +241,17 @@ class Network:
         """(quorum rounds, messages, bytes) attributed to ``client`` so far."""
         acct = self.client_counters.get(client)
         return (0, 0, 0) if acct is None else (acct[0], acct[1], acct[2])
+
+    def attribute(self, endpoint: str, riders=None) -> None:
+        """Set (or clear, with ``riders=None``/empty) the attribution map for
+        ``endpoint``: while set, counters of every listed rider advance with
+        the endpoint's own on each RPC it issues. The gateway tier brackets
+        each merged round with this so per-client OpStats stay meaningful."""
+        riders = tuple(dict.fromkeys(r for r in (riders or ()) if r != endpoint))
+        if riders:
+            self.client_attribution[endpoint] = riders
+        else:
+            self.client_attribution.pop(endpoint, None)
 
     # -- message timing --------------------------------------------------------
     def transmit_delay(self, src: str, dst: str, size: int, deliver: bool = True) -> float:
@@ -331,8 +354,13 @@ class Network:
         on_done: Callable[[OpFuture], None] | None,
     ) -> None:
         self.rpc_rounds += 1
-        acct = self.client_counters.setdefault(fut.client, [0, 0, 0])
-        acct[0] += 1
+        # the issuing client's account, plus any riders attributed to it
+        # (``attribute``): a gateway's merged round counts once per rider.
+        accts = [self.client_counters.setdefault(fut.client, [0, 0, 0])]
+        for rider in self.client_attribution.get(fut.client, ()):
+            accts.append(self.client_counters.setdefault(rider, [0, 0, 0]))
+        for a in accts:
+            a[0] += 1
         replies: dict[str, Any] = {}
         state = {"resumed": False}
         if rpc.need == "alive":
@@ -365,8 +393,9 @@ class Network:
                 self.msg_count += 1
                 size = shared_size if shared_size is not None else msg_wire_size(msg)
                 self.bytes_sent += size
-                acct[1] += 1
-                acct[2] += size
+                for a in accts:
+                    a[1] += 1
+                    a[2] += size
                 dropped = self.rng.random() < self.latency.drop_prob
                 delay = self.transmit_delay(fut.client, sid, size, deliver=not dropped)
                 if dropped:
@@ -381,8 +410,9 @@ class Network:
                     rsize = msg_wire_size(reply)
                     self.msg_count += 1
                     self.bytes_sent += rsize
-                    acct[1] += 1
-                    acct[2] += rsize
+                    for a in accts:
+                        a[1] += 1
+                        a[2] += rsize
                     rdropped = self.rng.random() < self.latency.drop_prob
                     rdelay = self.latency.server_compute + self.transmit_delay(
                         sid, fut.client, rsize, deliver=not rdropped

@@ -1,9 +1,18 @@
 """Session/future client API (ISSUE 3 tentpole): cross-file coalescing,
 uniform OpStats, multi-client Workload runs under the linearizability/
 coverability checkers, the reliability stat, margin-ordered repair
-scheduling, daemon auto-retarget, and the ``created`` bugfix."""
+scheduling, daemon auto-retarget, and the ``created`` bugfix — plus the
+ISSUE 4 scheduler/accounting fixes (drain re-arm, cross-network gather,
+recon payloads, the ``_groups`` invariants)."""
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # seeded fallback shim — see tests/_propfallback.py
+    from _propfallback import given, settings
+    from _propfallback import strategies as st
 
 from checkers import check_all
 from repro.core import DSS, DSSParams, TAG0, Workload, gather
@@ -472,6 +481,109 @@ def test_stale_daemon_subscription_is_inert():
     assert d1.observe_recon not in dss._recon_subs
     assert d2.observe_recon in dss._recon_subs
     dss.net.run()
+
+
+# ------------------------------------------------- ISSUE 4 satellite fixes
+def test_drain_rearm_preserves_order_for_mid_flight_enqueues():
+    """Reschedule-hazard regression: ops enqueued while the session drain is
+    MID-FLIGHT must (a) never spawn a concurrent drain that races ahead of
+    the drain's remaining groups, and (b) always be picked up by a re-armed
+    drain once the running one exits."""
+    dss = _dss(indexed=True, seed=71)
+    s = dss.session("s")
+    va, vb = _blob(91, 3000), _blob(92, 3000)
+    wfut = s.write("a", va)
+    rfut = s.read("a")          # drain: [write a] then [read a]
+    mid = {}
+
+    def inject():
+        # the drain started (flag stays armed, batch already taken) and is
+        # still mid-flight working its first group
+        assert s._drain_scheduled and not s._pending
+        assert not rfut.done()
+        mid["w"] = s.write("a", vb)
+        mid["r"] = s.read("a")
+        # no concurrent drain spawned: the intents wait for the re-arm
+        assert len(s._pending) == 2
+
+    dss.net.schedule(1e-3, inject)
+    # the pre-enqueued read must see ONLY the first write — with the old
+    # reset-on-entry flag a second drain could run the mid-flight write
+    # concurrently with this read and race it
+    assert rfut.result() == va
+    assert "w" in mid, "injection must have fired mid-drain"
+    assert mid["r"].result() == vb, "re-armed drain must run the late ops"
+    assert wfut.result()["success"] and mid["w"].result()["success"]
+    check_all(dss.history)
+
+
+def test_gather_across_networks_raises_valueerror():
+    """Futures of different DSS/Network instances must be rejected up front
+    instead of spinning one store's loop on the other's operation."""
+    dss1 = _dss(seed=73, indexed=True)
+    dss2 = _dss(seed=74, indexed=True)
+    f1 = dss1.session("a").write("f", b"x" * 300)
+    f2 = dss2.session("b").write("f", b"y" * 300)
+    with pytest.raises(ValueError, match="multiple DSS/Network"):
+        gather(f1, f2)
+    # each is still individually drivable on its own network
+    assert f1.result()["success"] and f2.result()["success"]
+
+
+def test_recon_future_resolves_to_payload_dict():
+    """Accounting regression: recon futures used to resolve to the bare
+    per-file block count that also fed OpStats.blocks (aliased). They now
+    carry a real payload dict, and stats keep the correct count."""
+    dss = _dss(indexed=True, seed=77)
+    s = dss.session("s")
+    assert s.write("f", _blob(93, 5000)).result()["success"]
+    cfg1 = dss.make_config()
+    res = s.recon("f", cfg1)
+    payload = res.result()
+    assert isinstance(payload, dict) and payload["success"]
+    assert payload["config"] == cfg1.cfg_id
+    assert payload["blocks"] >= 2  # genesis + at least one data block
+    assert res.stats.blocks == payload["blocks"]
+    dss.net.run()  # quiesce recon-spawned repair
+
+
+# ---------------------------------------------------- _groups property test
+_KINDS = ["read", "write", "recon", "stat"]
+_FIDS = ["f0", "f1", "f2"]
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(
+    st.tuples(st.sampled_from(_KINDS), st.sampled_from(_FIDS),
+              st.integers(0, 2)),
+    min_size=0, max_size=12,
+))
+def test_groups_preserve_program_order_and_never_mix_recon_targets(ops):
+    """ISSUE 4 satellite: for ANY intent sequence, ``Session._groups`` must
+    (1) keep global program order (concatenation identity) — hence per-fid
+    program order across kind changes, (2) group only same-kind runs,
+    (3) never put one fid twice in a group, and (4) never merge two recons
+    with different target cfg_ids."""
+    from types import SimpleNamespace
+
+    from repro.core.api import Session, _Intent
+
+    batch = [
+        _Intent(kind, fid, SimpleNamespace(cfg_id=f"c{cfg}"), None)
+        for kind, fid, cfg in ops
+    ]
+    groups = Session._groups(object.__new__(Session), batch)
+    flat = [it for g in groups for it in g]
+    assert flat == batch, "groups must concatenate back to program order"
+    for g in groups:
+        assert g, "no empty groups"
+        assert len({it.kind for it in g}) == 1
+        fids = [it.fid for it in g]
+        assert len(fids) == len(set(fids)), "duplicate fid within a group"
+        if g[0].kind == "recon":
+            assert len({it.arg.cfg_id for it in g}) == 1, (
+                "recons with different targets merged"
+            )
 
 
 def test_repair_daemon_idles_on_abd_config_after_retarget():

@@ -150,3 +150,30 @@ def test_network_charges_framed_bytes():
     expect = codec.wire_size(msg) + codec.wire_size(("echo", msg))
     assert net.bytes_sent == expect
     assert net.client_totals("c") == (1, 2, expect)
+
+
+# ----------------------------------------------- fallback nesting (ISSUE 4)
+def test_fallback_container_charges_codec_framing_for_nested_ndarrays():
+    """A payload OUTSIDE the wire vocabulary (here: it nests a set) falls
+    back to the ``nbytes`` heuristic for its structure — but any ndarray
+    inside it must be charged the codec's real ndarray frame, not the
+    legacy ``16 + nbytes`` guess. Pin the exact charged size."""
+    arr = np.arange(256, dtype=np.uint8)
+    msg = ("train-push", {"step"}, arr)
+    assert codec.try_wire_size(msg) is None, "set must be un-frameable"
+    # codec framing of the array itself, pinned byte by byte:
+    #   1 ('a') + [1+1+3 dtype '|u1'] + [1+1+(1+2) shape (256,)]
+    #   + 2 (uvarint 256) + 256 payload = 269 body, +2 frame prefix = 271
+    assert codec.wire_size(arr) == 271
+    assert nbytes(arr) == 271
+    # whole fallback container: 16 (tuple) + 10 ("train-push")
+    #   + 20 (set: 16 + "step") + 271 (framed array)
+    assert msg_wire_size(msg) == 16 + 10 + 20 + 271 == 317
+
+
+def test_object_dtype_ndarray_stays_outside_the_vocabulary():
+    """Pointer bytes must never be framed (they cannot round-trip): an
+    object-dtype array falls back to the heuristic instead."""
+    arr = np.array([b"x", ("nested",)], dtype=object)
+    assert codec.try_wire_size(arr) is None
+    assert nbytes(arr) == 16 + int(arr.nbytes)

@@ -1,0 +1,303 @@
+"""Cross-client gateway aggregation tier (ISSUE 4 tentpole): same-file
+merge + multicast, per-client attribution, cross-client program order,
+merged recons, gossip-fed RepairDaemon coverage, and the two-session /
+daemon / recon race stress."""
+import numpy as np
+import pytest
+
+from checkers import check_all
+from repro.core import DSS, DSSParams, gather
+from repro.core.gateway import GossipListener
+
+
+def _blob(seed, size):
+    return np.random.default_rng(seed).integers(0, 256, size, dtype=np.uint8).tobytes()
+
+
+def _dss(alg="coaresecf", n=6, m=2, seed=0, **kw):
+    return DSS(DSSParams(algorithm=alg, n_servers=n, parity_m=m, seed=seed,
+                         min_block=256, avg_block=512, max_block=2048, **kw))
+
+
+# ------------------------------------------------------------- merge paths
+def test_gateway_merges_same_file_reads_flat_in_clients():
+    """The acceptance bar: C clients reading the same hot file through the
+    gateway cost ONE quorum fan-out (rounds flat in C, equal to a single
+    session's read), with the result multicast to every rider."""
+    rounds = {}
+    for C in (2, 8):
+        dss = _dss(indexed=True, seed=11)
+        doc = _blob(1, 5000)
+        boot = dss.session("boot")
+        assert boot.write("hot", doc).result()["success"]
+        gw = dss.gateway()
+        sessions = [dss.session(f"c{i}", via=gw) for i in range(C)]
+        r0 = dss.net.rpc_rounds
+        futs = [s.read("hot") for s in sessions]
+        assert gather(*futs) == [doc] * C
+        rounds[C] = dss.net.rpc_rounds - r0
+        for f in futs:
+            assert f.stats.batched_with == C
+            assert f.stats.rounds == rounds[C]  # attributed the shared round
+        assert gw.stats["dedup_saved"] == C - 1
+        # direct ablation: C detached sessions pay C independent fan-outs
+        direct = [dss.session(f"d{i}") for i in range(C)]
+        d0 = dss.net.rpc_rounds
+        assert gather(*[s.read("hot") for s in direct]) == [doc] * C
+        assert dss.net.rpc_rounds - d0 == C * rounds[C], "direct path must scale O(C)"
+    assert rounds[8] == rounds[2], rounds
+
+
+def test_gateway_attribution_counters_per_rider():
+    """Network.attribute: during a merged round every rider's counters move
+    in lockstep with the gateway's, and stop once the round is over."""
+    dss = _dss(indexed=True, seed=13)
+    boot = dss.session("boot")
+    boot.write("f", _blob(2, 4000)).result()
+    gw = dss.gateway()
+    a, b = gw.session("a"), gw.session("b")
+    fa, fb = a.read("f"), b.read("f")
+    gather(fa, fb)
+    ta, tb = dss.net.client_totals("a"), dss.net.client_totals("b")
+    tg = dss.net.client_totals(gw.gid)
+    assert ta == tb == tg, (ta, tb, tg)
+    assert ta[0] > 0 and ta[2] > 0
+    assert not dss.net.client_attribution, "attribution must be cleared"
+    # detached traffic after the merge is NOT attributed to the riders
+    dss.session("solo").read("f").result()
+    assert dss.net.client_totals("a") == ta
+
+
+def test_gateway_cross_client_program_order():
+    """c1's write and c2's read of the same file in one gateway window must
+    execute in arrival order (kind change breaks the merged run)."""
+    dss = _dss(indexed=True, seed=17)
+    doc = _blob(3, 3000)
+    gw = dss.gateway()
+    c1, c2 = gw.session("c1"), gw.session("c2")
+    wfut = c1.write("f", doc)
+    rfut = c2.read("f")
+    assert rfut.result() == doc
+    assert wfut.result()["success"]
+
+
+def test_gateway_same_fid_writes_never_merge():
+    """Two clients writing the SAME file in one window stay two storage
+    rounds (the second needs the first one's tag to supersede it)."""
+    dss = _dss(indexed=True, seed=19)
+    gw = dss.gateway()
+    c1, c2 = gw.session("c1"), gw.session("c2")
+    va, vb = _blob(4, 2000), _blob(5, 2000)
+    f1, f2 = c1.write("f", va), c2.write("f", vb)
+    s1, s2 = gather(f1, f2)
+    assert s1["success"] and s2["success"]
+    assert f1.stats.batched_with == 1 and f2.stats.batched_with == 1
+    assert dss.session("check").read("f").result() == vb  # arrival order wins
+    check_all(dss.history)
+
+
+def test_gateway_merged_recon_multicast_and_split_on_target():
+    """Same-target recons from two clients merge (and dedupe the shared
+    fid); a different target config breaks the run. Recon futures resolve
+    to the real payload dict of ISSUE 4's accounting fix."""
+    dss = _dss(n=7, m=3, indexed=True, seed=23)
+    boot = dss.session("boot")
+    gather(boot.write("x", _blob(6, 4000)), boot.write("y", _blob(7, 4000)))
+    gw = dss.gateway()
+    c1, c2 = gw.session("c1"), gw.session("c2")
+    cfg1 = dss.make_config(n_servers=7)
+    f1 = c1.recon("x", cfg1)
+    f2 = c2.recon("x", cfg1)   # same fid, same target: dedupe + multicast
+    f3 = c2.recon("y", cfg1)   # rides the same merged round
+    r1, r2, r3 = gather(f1, f2, f3)
+    assert r1 == r2 and r1["config"] == cfg1.cfg_id and r1["blocks"] >= 2
+    assert r3["blocks"] >= 2 and f1.stats.blocks == r1["blocks"]
+    assert f1.stats.batched_with == 3
+    dss.net.run()  # quiesce recon-spawned repair
+    assert dss.session("check").read("x").result() == _blob(6, 4000)
+    check_all(dss.history)
+
+
+def test_gateway_error_delivered_via_rider_future():
+    dss = _dss(alg="coabdf", indexed=True, seed=29)  # static: no recon
+    gw = dss.gateway()
+    s = gw.session("c1")
+    s.write("f", b"x" * 500).result()
+    fut = s.recon("f", dss.make_config())
+    with pytest.raises(NotImplementedError):
+        fut.result()
+
+
+# ----------------------------------------------------------------- gossip
+def test_gossip_daemon_acquires_coverage_and_repairs():
+    """A RepairDaemon with NO local recon callback (auto_retarget=False)
+    learns a reconfiguration through the gateway's gossip and repairs an
+    object of the new configuration — the ROADMAP membership item."""
+    dss = DSS(DSSParams(algorithm="coaresec", n_servers=6, parity_m=4,
+                        seed=31, recon_repair=False))
+    gw = dss.gateway()
+    w = dss.client("w")
+    dss.net.run_op(w.update("f", _blob(8, 2000)), client="w")
+    dss.net.run()
+    daemon = dss.start_repair_daemon(period=0.01, objs_per_cycle=2,
+                                     auto_retarget=False)
+    gw.register_daemon(daemon)
+    cfg1 = dss.make_config()
+    fut = dss.net.spawn(dss.client("g").recon("f", cfg1), client="g")
+    dss.net.run(until=dss.net.now + 0.2)
+    assert fut.done
+    assert (1, cfg1.cfg_id) in daemon.targets, "gossip must add coverage"
+    assert daemon.stats["gossip"] == 1
+    lst = dss.net.servers["s3"].ec[("f", 1)]
+    t_star = max(t for t, e in lst.items() if e is not None)
+    del lst[t_star]
+    dss.net.run(until=dss.net.now + 0.3)
+    dss.stop_repair_daemon()
+    gw.stop()
+    dss.net.run()
+    assert dss.net.servers["s3"].ec[("f", 1)].get(t_star) is not None, (
+        "daemon must repair the gossiped configuration"
+    )
+    # retired (fully superseded) targets are never re-ingested from gossip
+    assert daemon.stats["gossip"] == 1, daemon.stats
+
+
+def test_gossip_is_symmetric_anti_entropy():
+    """The gossip ack carries the daemon's own coverage, so the gateway
+    learns configurations it never observed locally."""
+    dss = DSS(DSSParams(algorithm="coaresec", n_servers=6, parity_m=4,
+                        seed=37, recon_repair=False))
+    gw = dss.gateway()
+    dss.net.run_op(dss.client("w").update("f", _blob(9, 1000)), client="w")
+    daemon = dss.start_repair_daemon(period=0.01, objs_per_cycle=1)
+    gw.register_daemon(daemon)
+    # the daemon privately learns a config the gateway never saw
+    cfg9 = dss.make_config()
+    daemon.observe_recon(cfg9, 3)
+    dss.net.run(until=dss.net.now + 0.1)
+    dss.stop_repair_daemon()
+    gw.stop()
+    dss.net.run()
+    assert (3, cfg9.cfg_id) in gw.coverage, "ack must teach the gateway"
+    assert gw.stats["gossip_learned"] >= 1
+
+
+def test_gossip_listener_is_not_a_storage_target():
+    """Listener endpoints must never be drafted as storage servers by
+    make_config, and unknown messages to them fail loudly."""
+    dss = _dss(indexed=True, seed=41)
+    gw = dss.gateway()
+    daemon = dss.start_repair_daemon(period=0.01, max_cycles=1)
+    sid = gw.register_daemon(daemon)
+    assert sid in dss.net.servers
+    cfg = dss.make_config(n_servers=6)
+    assert sid not in cfg.servers
+    with pytest.raises(ValueError):
+        dss.net.servers[sid].handle("x", ("margin-batch", ("f",), 0))
+    with pytest.raises(ValueError):
+        gw.register_daemon(daemon)  # duplicate registration
+    gw.stop()
+    dss.net.run()
+    assert isinstance(dss.net.servers[sid], GossipListener)
+
+
+def test_rider_stats_unpolluted_by_gossip_and_recon_repair():
+    """Review regression (ISSUE 4): background traffic under the gateway —
+    the gossip loop, and the repair pass a merged recon spawns — runs under
+    its OWN client ids, so rider OpStats show ONLY the merged round even
+    when a gossip wake-up or repair lands inside it."""
+    dss = _dss(n=7, m=3, indexed=True, seed=53)
+    doc = _blob(11, 5000)
+    boot = dss.session("boot")
+    assert boot.write("hot", doc).result()["success"]
+    # reference: merged 2-client read with NO daemon registered
+    gw0 = dss.gateway("gw0")
+    futs = [s.read("hot") for s in (gw0.session("x1"), gw0.session("x2"))]
+    clean_rounds = gather(*futs) and futs[0].stats.rounds
+    gw0.stop()
+    # now with an aggressive gossip loop running through the same window
+    gw = dss.gateway("gw1", gossip_period=0.0005)
+    daemon = dss.start_repair_daemon(period=0.01, objs_per_cycle=1,
+                                     auto_retarget=False)
+    gw.register_daemon(daemon)
+    a, b = gw.session("a"), gw.session("b")
+    fa, fb = a.read("hot"), b.read("hot")
+    assert gather(fa, fb) == [doc, doc]
+    assert fa.stats.rounds == fb.stats.rounds == clean_rounds, (
+        fa.stats, clean_rounds
+    )
+    assert dss.net.client_totals("gw1:gossip")[0] > 0, (
+        "gossip must actually have run during the window"
+    )
+    # a merged recon spawns recon-repair under its own id too: riders' stats
+    # equal each other and exclude the background repair's rounds
+    cfg1 = dss.make_config(n_servers=7)
+    f1, f2 = a.recon("hot", cfg1), b.recon("hot", cfg1)
+    gather(f1, f2)
+    assert f1.stats.rounds == f2.stats.rounds
+    dss.net.run(until=dss.net.now + 0.1)
+    assert dss.net.client_totals("gw1:recon-repair")[0] > 0, (
+        "recon-repair must run under its own client id"
+    )
+    dss.stop_repair_daemon()
+    gw.stop()
+    dss.net.run()
+
+
+# ------------------------------------------------------------------ stress
+def test_stress_two_gateway_sessions_race_daemon_through_recon():
+    """ISSUE 4 satellite: two gateway-attached sessions keep reading and
+    writing while a gossip-fed RepairDaemon runs and a reconfiguration
+    moves the files — histories must stay atomic/coverable and contents
+    must match a write that actually happened."""
+    dss = _dss(n=7, m=3, indexed=True, seed=43)
+    files = ["f0", "f1", "f2"]
+    docs = {f: _blob(50 + i, 2500) for i, f in enumerate(files)}
+    boot = dss.session("boot")
+    assert all(s["success"] for s in
+               gather(*[boot.write(f, d) for f, d in docs.items()]))
+    gw = dss.gateway()
+    daemon = dss.start_repair_daemon(period=0.01, objs_per_cycle=3,
+                                     auto_retarget=False)
+    gw.register_daemon(daemon)
+    a, b = gw.session("a"), gw.session("b")
+    edits = {f: _blob(60 + i, 2500) for i, f in enumerate(files)}
+    cfg1 = dss.make_config(n_servers=7)
+    futs = [
+        a.write("f0", edits["f0"]),
+        b.read("f0"),
+        a.recon("f1", cfg1),
+        b.write("f2", edits["f2"]),
+        a.read("f2"),
+        b.recon("f2", cfg1),
+    ]
+    results = gather(*futs)
+    assert results[2]["config"] == cfg1.cfg_id
+    assert (1, cfg1.cfg_id) in gw.coverage
+    dss.net.run(until=dss.net.now + 0.1)   # a few daemon/gossip cycles
+    assert daemon.stats["gossip"] >= 1, "daemon must learn cfg1 via gossip"
+    dss.stop_repair_daemon()
+    gw.stop()
+    dss.net.run()
+    final = dss.session("check")
+    got = gather(*[final.read(f) for f in files])
+    for f, content in zip(files, got):
+        assert content in (docs[f], edits.get(f)), f"{f}: unknown content"
+    assert got[0] == edits["f0"] and got[2] == edits["f2"]
+    check_all(dss.history)
+
+
+# --------------------------------------------- merged-batch dedupe guards
+def test_empty_file_rides_the_merged_batch():
+    """Regression (fragment.py, ISSUE 4): an indexed file whose block index
+    is EMPTY (empty-content write) must still resolve through the batched
+    multi-file read instead of vanishing from the merged result."""
+    dss = _dss(indexed=True, seed=47)
+    s = dss.session("s")
+    assert s.write("empty", b"").result()["success"]
+    assert s.read("empty").result() == b""
+    # merged with a non-empty file it still round-trips
+    doc = _blob(10, 3000)
+    s.write("full", doc)
+    f1, f2 = s.read("empty"), s.read("full")
+    assert gather(f1, f2) == [b"", doc]

@@ -129,13 +129,19 @@ def test_nbytes_accounting():
 
 
 def test_nbytes_ndarray_payloads():
-    """np.ndarray must be sized by its buffer, not the generic 64-byte default
-    (that undercounting skewed the latency model for array-valued messages)."""
+    """np.ndarray must be sized by its buffer — since ISSUE 4 via the codec's
+    real ndarray framing (dtype + shape + payload frame), not the legacy
+    ``16 + nbytes`` guess and never the generic 64-byte default."""
+    from repro.net import codec
+
     a = np.zeros((4, 8), dtype=np.uint8)
-    assert nbytes(a) == 16 + 32
+    assert nbytes(a) == codec.wire_size(a)
+    assert a.nbytes < nbytes(a) <= a.nbytes + 16
     big = np.zeros(1 << 16, dtype=np.float32)
-    assert nbytes(big) == 16 + (1 << 18)
-    assert nbytes(("frag", a)) == 16 + 4 + 16 + 32
+    assert nbytes(big) == codec.wire_size(big)
+    assert big.nbytes < nbytes(big) <= big.nbytes + 20
+    # arrays nested in heuristic containers carry their framed size
+    assert nbytes(("frag", a)) == 16 + 4 + codec.wire_size(a)
     # numpy scalars: their own itemsize, not 64
     assert nbytes(np.uint8(3)) == 1
     assert nbytes(np.float64(1.5)) == 8

@@ -4,6 +4,7 @@
 #   make tier1         exactly the ROADMAP tier-1 command
 #   make repair-tests  repair subsystem + batched-coding + sim tests only
 #   make batch-tests   batched state-transfer path tests only
+#   make kernel-tests  GF(256) kernel + erasure + coding-backend focus run
 #   make bench-repair  durability-restoration / interference benchmark
 #   make bench-readpath  batched vs per-object read-path benchmark
 #   make bench-multifile cross-file Session fan-out vs legacy per-file ops
@@ -18,8 +19,8 @@
 
 PY ?= python
 
-.PHONY: test tier1 repair-tests batch-tests bench-repair bench-readpath \
-        bench-multifile bench-gateway bench-smoke lint dev-deps
+.PHONY: test tier1 repair-tests batch-tests kernel-tests bench-repair \
+        bench-readpath bench-multifile bench-gateway bench-smoke lint dev-deps
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -29,6 +30,10 @@ repair-tests:
 
 batch-tests:
 	PYTHONPATH=src $(PY) -m pytest -q tests/test_batchpath.py tests/test_dap_properties.py
+
+kernel-tests:
+	PYTHONPATH=src $(PY) -m pytest -q tests/test_kernel_gf256.py tests/test_erasure.py \
+		tests/test_coding_backend.py tests/test_batchpath.py
 
 test: tier1 repair-tests
 

@@ -66,6 +66,34 @@ def run() -> list[dict]:
     dt = _time(lambda: code.decode(coded[keep], keep), warmup=1, iters=3)
     rows.append({"bench": "rs_decode", "n": 12, "k": 10,
                  "cpu_MBps": 10 * (1 << 20) / 1e6 / dt})
+    # batched-bytes coding path, LUT backend vs the kernel backend the
+    # storage data path dispatches to (ISSUE 6 acceptance: >= 3x at the
+    # large-block point): ragged values, one fused encode + one fused
+    # non-systematic decode per call, exactly what EcDap issues.
+    rng = np.random.default_rng(3)
+    values = [
+        rng.integers(0, 256, (1 << 18) + 1024 * i, dtype=np.uint8).tobytes()
+        for i in range(8)
+    ]
+    total_mb = sum(len(v) for v in values) / 1e6
+    sub = (1, 3, 4, 5, 6, 7, 8, 9, 11, 13)  # mixed data+parity -> real matmul
+    mbps = {}
+    for backend in ("numpy", "kernel"):
+        bcode = RSCode(n=14, k=10, backend=backend)
+
+        def cycle():
+            enc = bcode.encode_bytes_batch(values)
+            items = [({i: f[i] for i in sub}, o) for f, o in enc]
+            return bcode.decode_bytes_batch(items)
+
+        assert cycle() == values  # also the kernel jit warmup
+        dt = _time(cycle, warmup=1, iters=3)
+        mbps[backend] = 2 * total_mb / dt  # encode pass + decode pass
+    rows.append({
+        "bench": "rs_bytes_batch", "n": 14, "k": 10,
+        "lut_MBps": mbps["numpy"], "kernel_MBps": mbps["kernel"],
+        "speedup": mbps["kernel"] / mbps["numpy"],
+    })
     # CDC gear hash
     blob = np.random.default_rng(2).integers(0, 256, 1 << 22, dtype=np.uint8)
     h, b = gearhash(blob)  # jit'd ref path on CPU

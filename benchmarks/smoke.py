@@ -137,6 +137,33 @@ def run() -> list[dict]:
     chunks = split_chunks(bytes(data.reshape(-1)), min_size=256, avg_size=512,
                           max_size=2048)
     rows.append({"bench": "smoke_kernels", "chunks": len(chunks)})
+
+    # --- coding family (ISSUE 6): kernel-backend batched-bytes throughput --
+    # The one wall-clock metric the smoke gate checks as a FLOOR: a routing
+    # regression that silently drops the data path back to the byte-LUT
+    # backend shows up as an order-of-magnitude throughput loss here.
+    import time
+
+    kcode = RSCode(n=12, k=10, backend="kernel")
+    vals = [np.random.default_rng(60 + i)
+            .integers(0, 256, 1 << 18, dtype=np.uint8).tobytes()
+            for i in range(4)]
+    sub = (0, 2, 3, 4, 5, 6, 7, 8, 9, 11)  # mixed subset -> real decode matmul
+
+    def _cycle():
+        enc = kcode.encode_bytes_batch(vals)
+        return kcode.decode_bytes_batch(
+            [({i: f[i] for i in sub}, o) for f, o in enc]
+        )
+
+    assert _cycle() == vals  # correctness + jit warmup (warmup not timed)
+    iters = 3
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        _cycle()
+    dt = (time.perf_counter() - t0) / iters
+    rows.append({"bench": "smoke_coding", "backend": "kernel",
+                 "coding_mbps": 2 * sum(len(v) for v in vals) / 1e6 / dt})
     return rows
 
 
@@ -147,11 +174,18 @@ def check_baseline(rows: list[dict], baseline_path) -> list[str]:
     expected ``baseline`` value and a per-metric ``tolerance``; a matching
     row whose value exceeds ``baseline + tolerance`` — or a metric whose
     rows disappeared — is a failure. Values well UNDER baseline are only
-    reported (an improvement should be locked in by re-baselining)."""
+    reported (an improvement should be locked in by re-baselining).
+
+    ``direction`` (ISSUE 6) flips the gate for bigger-is-better metrics:
+    with ``"min"``, a value BELOW ``baseline - tolerance`` is the failure
+    (e.g. ``coding_mbps`` collapsing back to byte-LUT speed) and a value
+    above ``baseline + tolerance`` is the reported improvement. The default
+    ``"max"`` keeps the original round-count semantics."""
     spec = json.loads(Path(baseline_path).read_text())
     failures: list[str] = []
     for m in spec["metrics"]:
         want = {"bench": m["bench"], **m.get("match", {})}
+        direction = m.get("direction", "max")
         matching = [r for r in rows
                     if all(r.get(k) == v for k, v in want.items())]
         if not matching:
@@ -159,14 +193,16 @@ def check_baseline(rows: list[dict], baseline_path) -> list[str]:
             continue
         for row in matching:
             got = row.get(m["field"])
+            lo, hi = m["baseline"] - m["tolerance"], m["baseline"] + m["tolerance"]
             if got is None:
                 failures.append(f"{want}: row lacks field {m['field']!r}")
-            elif got > m["baseline"] + m["tolerance"]:
+            elif (got > hi) if direction == "max" else (got < lo):
                 failures.append(
                     f"{want} {m['field']}={got} regressed past "
-                    f"baseline {m['baseline']} (+{m['tolerance']} tolerance)"
+                    f"baseline {m['baseline']} (±{m['tolerance']} tolerance, "
+                    f"direction {direction})"
                 )
-            elif got < m["baseline"] - m["tolerance"]:
+            elif (got < lo) if direction == "max" else (got > hi):
                 print(f"smoke: {want} {m['field']}={got} improved on "
                       f"baseline {m['baseline']} — consider re-baselining",
                       file=sys.stderr)

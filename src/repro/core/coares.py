@@ -25,6 +25,13 @@ batch forms, so the fragmented (FM) paths issue O(1) quorum rounds for a
 B-block file instead of O(B). ``recon_batch`` finalization also spawns a
 background repair pass of the newly installed configuration (the missing
 redundancy-restoration step — see ``repro.core.repair``).
+
+Coding backend (ISSUE 6): every DAP this engine builds via ``make_dap``
+receives the network handle, and EC DAPs read ``net.coding_backend``
+("numpy" | "kernel" | "auto", set by ``DSS`` from
+``DSSParams.coding_backend``) — so recon state transfer between
+configurations decodes/re-encodes on the same GF(256) backend as foreground
+reads and writes, with no extra plumbing through the engine.
 """
 from __future__ import annotations
 

@@ -32,7 +32,7 @@ from typing import Any, Generator, Iterable, Sequence
 
 from repro.core.dap.base import DapClient
 from repro.core.tags import TAG0, Tag
-from repro.erasure.rs import RSCode
+from repro.erasure.rs import RSCode, element_crc_ok
 from repro.net.sim import RPC, Sleep
 
 _MAX_RETRIES = 200
@@ -43,7 +43,14 @@ class EcDap(DapClient):
         super().__init__(net, client_id, config, cfg_idx, client_state)
         self.optimized = optimized
         self.kind = "ec_opt" if optimized else "ec"
-        self.code = RSCode(n=config.n, k=config.k)
+        # coding_backend rides ambiently on the network handle (set from
+        # DSSParams.coding_backend by DSS.__init__) so every DAP a client or
+        # the recon engine builds — here, coares.py, repair — codes on the
+        # same backend without threading a parameter through make_dap.
+        self.code = RSCode(
+            n=config.n, k=config.k,
+            backend=getattr(net, "coding_backend", "numpy"),
+        )
 
     # -- client-local (c.tag, c.val) state (Alg 4) ---------------------------
     def _local(self, obj: str) -> tuple[Tag, Any]:
@@ -101,7 +108,12 @@ class EcDap(DapClient):
                     fidx = self.config.frag_index(sid)
                     for t, e in lists[pos]:
                         seen[t] = seen.get(t, 0) + 1
-                        if e is not None:
+                        # verify the element's stored CRC in the same pass
+                        # that gathers it: a bit-rotted fragment is treated
+                        # as absent (the tag stays visible), so the decode
+                        # below never sees corrupt rows and the repair loop
+                        # later restores the holder.
+                        if e is not None and element_crc_ok(e):
                             frags.setdefault(t, {})[fidx] = e
                 local_tag, local_val = local[obj]
                 if self.optimized:
@@ -141,10 +153,12 @@ class EcDap(DapClient):
             if decode_jobs:
                 # ONE fused GF(256) matmul for every object that resolved this
                 # round (grouped by surviving-fragment index set inside).
+                # hand RSCode every surviving fragment — it prefers the
+                # all-systematic subset (no matmul) and groups the rest by
+                # index set over one cached inverted generator each.
                 values = self.code.decode_bytes_batch(
                     [
-                        ({i: fm[i][0] for i in sorted(fm)[:k]},
-                         fm[sorted(fm)[0]][1])
+                        ({i: e[0] for i, e in fm.items()}, fm[min(fm)][1])
                         for _obj, _t, fm in decode_jobs
                     ]
                 )
@@ -182,15 +196,22 @@ class EcDap(DapClient):
     # via client.precode() (ISSUE 1) so a SEQUENTIAL multi-block write —
     # one put_data at a time, non-indexed walk — still encodes the whole
     # update on its first block write and serves the rest from the cache.
-    def _encode_values(self, values: Sequence[bytes]) -> list[tuple[list[bytes], int]]:
+    def _encode_values(
+        self, values: Sequence[bytes]
+    ) -> list[tuple[list[bytes], int, list[int]]]:
         ckey = ("_ecache", self.config.n, self.config.k)
         cache = self.client_state.get(ckey) or {}
         pending = self.client_state.get("_batch_values") or ()
         missing = sorted((set(values) | set(pending)) - cache.keys())
+        # with_crc: per-fragment CRC-32s come out of the same traversal that
+        # slices the coded rows into fragment bytes — shipped inside each
+        # element so readers/repair can detect bit-rot without a second pass.
         if len(missing) == 1:
-            fresh = {missing[0]: self.code.encode_bytes(missing[0])}
+            fresh = {missing[0]: self.code.encode_bytes(missing[0], with_crc=True)}
         elif missing:
-            fresh = dict(zip(missing, self.code.encode_bytes_batch(missing)))
+            fresh = dict(
+                zip(missing, self.code.encode_bytes_batch(missing, with_crc=True))
+            )
         else:
             fresh = {}
         if fresh and pending:
@@ -223,8 +244,16 @@ class EcDap(DapClient):
             sid: (
                 "ec-put-batch",
                 tuple(
-                    (obj, tag, (frag_rows[self.config.frag_index(sid)], orig))
-                    for (obj, tag, _v), (frag_rows, orig) in zip(todo, encoded)
+                    (
+                        obj,
+                        tag,
+                        (
+                            frags[self.config.frag_index(sid)],
+                            orig,
+                            crcs[self.config.frag_index(sid)],
+                        ),
+                    )
+                    for (obj, tag, _v), (frags, orig, crcs) in zip(todo, encoded)
                 ),
                 self.cfg_idx,
                 self.config.delta,

@@ -22,10 +22,13 @@ Safety under concurrent writes
 Repair never regresses a server's List to an older tag:
 
 * ``ec-repair-push`` only *adds* an element for a tag the server has never
-  seen; it never overwrites an element and never resurrects a trimmed
-  ``(tag, ⊥)`` placeholder. Inserting cannot remove newer tags, and the
-  handler re-applies the same δ+1 trim as ``ec-put``, so the List-length
-  invariant (Alg 5) is preserved.
+  seen; it never resurrects a trimmed ``(tag, ⊥)`` placeholder, and the
+  only element it may overwrite is one whose bytes FAIL their own stored
+  checksum (bit-rot healing, ISSUE 6) — the replacement is the bit-identical
+  row the writer would have stored, so this is a pure restore, not a state
+  change. Inserting cannot remove newer tags, and the handler re-applies
+  the same δ+1 trim as ``ec-put``, so the List-length invariant (Alg 5) is
+  preserved.
 * The pushed element is the *bit-identical* coded row the writer would
   have sent (MDS determinism), so a reader that decodes with repaired
   fragments obtains exactly the written value — C2 is untouched.
@@ -39,11 +42,12 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Any, Generator
+import zlib
 
 import numpy as np
 
 from repro.core.tags import TAG0, Config, OpRecord, Tag
-from repro.erasure.rs import RSCode
+from repro.erasure.rs import RSCode, element_crc_ok
 from repro.net.sim import Join, RPC, Sleep
 
 
@@ -155,7 +159,7 @@ class RepairController:
         *,
         client_id: str = "repair",
         history: list | None = None,
-        backend: str = "numpy",
+        backend: str | None = None,
     ):
         if config.dap not in ("ec", "ec_opt"):
             raise ValueError(
@@ -166,6 +170,10 @@ class RepairController:
         self.cfg_idx = cfg_idx
         self.client_id = client_id
         self.history = history if history is not None else []
+        # None = inherit the store-wide coding backend riding on the network
+        # handle (DSSParams.coding_backend), same as EcDap.
+        if backend is None:
+            backend = getattr(net, "coding_backend", "numpy")
         self.code = RSCode(n=config.n, k=config.k, backend=backend)
 
     # ----------------------------------------------------------------- probe
@@ -192,7 +200,11 @@ class RepairController:
         for sid, (_kindtok, lst) in replies.items():
             fidx = self.config.frag_index(sid)
             for t, e in lst:
-                if e is not None:
+                # a stored element whose bytes fail their own CRC is treated
+                # as lost: its server is NOT a holder, so it lands in
+                # ``missing`` below and the push replaces the rotted element
+                # (the server side overwrites only on a failed self-check).
+                if e is not None and element_crc_ok(e):
                     frags.setdefault(t, {})[fidx] = e
                     holders.setdefault(t, set()).add(sid)
         decodable = [t for t, m in frags.items() if len(m) >= self.config.k]
@@ -236,16 +248,17 @@ class RepairController:
             self.net.latency.dec_per_byte * mat.size
             + self.net.latency.enc_per_byte * rows.size
         )
+        frag_bytes = [rows[j].tobytes() for j in range(len(missing))]
         per_dest = {
             sid: (
                 "ec-repair-push",
                 obj,
                 self.cfg_idx,
                 t_star,
-                (rows[j].tobytes(), orig),
+                (fb, orig, zlib.crc32(fb)),
                 self.config.delta,
             )
-            for j, sid in enumerate(missing)
+            for sid, fb in zip(missing, frag_bytes)
         }
         acks = yield RPC(
             dests=tuple(missing), msg=None, per_dest=per_dest, need="alive"

@@ -11,6 +11,7 @@ from typing import Any
 
 from repro.net.sim import Server
 from repro.core.tags import TAG0, Tag
+from repro.erasure.rs import element_crc_ok
 
 
 class StorageServer(Server):
@@ -176,12 +177,16 @@ class StorageServer(Server):
             return ("ec-repair-list", [(t, e) for t, e in lst.items()])
         if op == "ec-repair-push":
             # Monotone repair insert: only ADDS a coded element for a tag this
-            # server has never seen. It never overwrites an existing element,
-            # never resurrects a trimmed (tag, ⊥) placeholder (the server
-            # already moved past that tag), and re-applies the δ+1 trim so the
-            # List bound holds. A racing ec-put therefore can never be
-            # regressed by repair traffic: newer tags stay, and a pushed tag
-            # older than the trim window is trimmed right back out.
+            # server has never seen. It never resurrects a trimmed (tag, ⊥)
+            # placeholder (the server already moved past that tag), and
+            # re-applies the δ+1 trim so the List bound holds. The one
+            # overwrite allowed (ISSUE 6) is an element whose bytes FAIL
+            # their own stored checksum — bit-rot on this server; the pushed
+            # replacement is the bit-identical coded row the writer would
+            # have stored (MDS determinism), so healing is a pure restore.
+            # A racing ec-put therefore can never be regressed by repair
+            # traffic: newer tags stay, and a pushed tag older than the trim
+            # window is trimmed right back out.
             _, obj, idx, tag, elem, delta = msg
             lst = self._ec_list((obj, idx))
             applied = False
@@ -189,6 +194,9 @@ class StorageServer(Server):
                 lst[tag] = elem
                 applied = True
                 self._trim_list(lst, delta)
+            elif lst[tag] is not None and not element_crc_ok(lst[tag]):
+                lst[tag] = elem
+                applied = True
             return ("repair-ack", applied)
         if op == "read-next":
             _, obj, idx = msg

@@ -18,6 +18,7 @@ from repro.core.coares import CoAresClient, StaticCoverableClient
 from repro.core.fragment import FragmentationModule
 from repro.core.server import StorageServer
 from repro.core.tags import Config
+from repro.erasure.rs import BACKENDS as CODING_BACKENDS
 from repro.net.sim import LatencyModel, Network
 
 ALGORITHMS = {
@@ -48,6 +49,11 @@ class DSSParams:
     batched: bool = True       # multi-object batch RPCs on the indexed FM path
     recon_repair: bool = True  # recon finalization spawns repair of the new config
     recon_repair_delay: float = 0.0
+    # ISSUE 6 — GF(256) coding backend for every EC code this store builds
+    # (EcDap, repair, recon state transfer): "numpy" (byte-LUT), "kernel"
+    # (Pallas on TPU / jit'd XLA on CPU), or "auto" (size-based dispatch at
+    # the measured crossover). See repro.erasure.rs.
+    coding_backend: str = "auto"
     latency: LatencyModel = dc_field(default_factory=LatencyModel)
 
 
@@ -231,7 +237,15 @@ class DSS:
         p = self.params
         if p.algorithm not in ALGORITHMS:
             raise ValueError(f"unknown algorithm {p.algorithm!r}")
+        if p.coding_backend not in CODING_BACKENDS:
+            raise ValueError(
+                f"unknown coding backend {p.coding_backend!r}; "
+                f"expected one of {CODING_BACKENDS}"
+            )
         self.net = Network(seed=p.seed, latency=p.latency)
+        # ambient store-wide coding backend: every RSCode built against this
+        # network (DAPs, repair controllers/daemons, recon transfers) reads it
+        self.net.coding_backend = p.coding_backend
         self.history: list = []
         sids = tuple(f"s{i}" for i in range(p.n_servers))
         for s in sids:

@@ -3,9 +3,14 @@
 ``gf256_matmul(A, B)`` — drop-in GF(256) matrix product; host-side prep
 (bit-matrix expansion of the tiny A, L padding) + the Pallas kernel.
 ``rs_encode_parity(parity_matrix, data)`` — the RS encode hot path.
+``gf256_coding_matmul(A, B)`` — what the storage data path's "kernel"/"auto"
+coding backend dispatches to (see ``repro.erasure.rs``): the Pallas kernel
+where it compiles natively (TPU), the jit'd XLA LUT formulation on CPU —
+``interpret=True`` Pallas is a correctness harness, orders of magnitude
+slower than either, and never a production path.
 
-On CPU (this container) the kernel runs in ``interpret=True`` mode; on TPU it
-compiles natively. Both are bit-identical to ``ref.gf256_matmul_ref``.
+All paths are bit-identical to ``ref.gf256_matmul_ref`` (and to the numpy
+LUT reference ``erasure.gf.gf_matmul_np``).
 """
 from __future__ import annotations
 
@@ -24,6 +29,25 @@ _SUBLANE, _LANE = 8, 128
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def kernel_is_native() -> bool:
+    """True when the Pallas kernel compiles for real hardware (TPU). Gates
+    production dispatch and the block-diagonal group fusion in RSCode."""
+    return jax.default_backend() == "tpu"
+
+
+def _validate_shapes(A: np.ndarray, B) -> None:
+    # ValueError, not assert: shape bugs must not vanish under ``python -O``
+    # and surface later as wrong-shaped kernel output.
+    if A.ndim != 2:
+        raise ValueError(f"A must be a 2-D (m, k) matrix, got shape {A.shape}")
+    if getattr(B, "ndim", None) != 2:
+        raise ValueError(f"B must be a 2-D (k, L) matrix, got shape {getattr(B, 'shape', None)}")
+    if B.shape[0] != A.shape[1]:
+        raise ValueError(
+            f"inner dimensions disagree: A is {A.shape}, B is {tuple(B.shape)}"
+        )
 
 
 @functools.lru_cache(maxsize=128)
@@ -49,10 +73,15 @@ def gf256_matmul(
     if interpret is None:
         interpret = _default_interpret()
     A = np.asarray(A, dtype=np.uint8)
-    m, k = A.shape
     B = jnp.asarray(B, dtype=jnp.uint8)
-    assert B.shape[0] == k, (A.shape, B.shape)
+    _validate_shapes(A, B)
+    m, k = A.shape
     L = B.shape[1]
+    if m == 0 or L == 0 or k == 0:
+        # degenerate shapes the storage path can produce (m == 0 codes,
+        # empty values): the product is an empty/zero matrix — don't hand
+        # a zero-sized grid to Pallas.
+        return jnp.zeros((m, L), dtype=jnp.uint8)
     # Block size: shrink for small inputs (interpret-mode tests), keep
     # lane-aligned where possible.
     bl = min(block_l, _round_up(L, _LANE))
@@ -61,6 +90,42 @@ def gf256_matmul(
         B = jnp.pad(B, ((0, 0), (0, Lp - L)))
     abits = jnp.asarray(_abits_cached(A.tobytes(), m, k))
     out = gf2_bitsliced_matmul(abits, B, m=m, k=k, block_l=bl, interpret=interpret)
+    return out[:, :L]
+
+
+@functools.lru_cache(maxsize=1)
+def _jit_ref():
+    from repro.kernels.gf256_matmul.ref import gf256_matmul_ref
+
+    return jax.jit(gf256_matmul_ref)
+
+
+def gf256_coding_matmul(A: np.ndarray, B: np.ndarray, *, block_l: int = 2048) -> jax.Array:
+    """GF(256) matmul as dispatched by the storage data path (RSCode
+    backend "kernel"/"auto").
+
+    TPU: the native Pallas bitsliced kernel. CPU: the jit'd XLA LUT
+    formulation — measured 3-10x the numpy byte-LUT from ~16 KiB operands on
+    the reference container (``benchmarks/bench_kernels.py``). L is bucketed
+    to powers of two (zero-pad, slice after — GF matmul is column-wise, so
+    padding columns is bit-identical) to bound jit retraces across ragged
+    batch widths to O(log L) compilations per (m, k).
+    """
+    A = np.asarray(A, dtype=np.uint8)
+    B = np.asarray(B, dtype=np.uint8)
+    _validate_shapes(A, B)
+    m, k = A.shape
+    L = B.shape[1]
+    if m == 0 or L == 0 or k == 0:
+        return jnp.zeros((m, L), dtype=jnp.uint8)
+    if kernel_is_native():
+        return gf256_matmul(A, B, block_l=block_l, interpret=False)
+    Lp = max(_LANE, 1 << (L - 1).bit_length())
+    if Lp != L:
+        Bp = np.zeros((k, Lp), dtype=np.uint8)
+        Bp[:, :L] = B
+        B = Bp
+    out = _jit_ref()(jnp.asarray(A), jnp.asarray(B))
     return out[:, :L]
 
 

@@ -26,8 +26,10 @@ followed by the payload:
     a  dtype,shape,raw      numpy ndarray (C-contiguous copy)
 
 Everything the storage servers send or receive — tags ``(ts, wid)``, coded
-elements ``(bytes, int)``, ``Config`` objects inside ``read-next`` replies,
-the ``*_batch`` envelopes — round-trips exactly (``decode_frame(encode_frame
+elements ``(bytes, orig_len)`` and their checksummed ``(bytes, orig_len,
+crc32)`` form (ISSUE 6; the CRC is a plain uvarint int, so integrity tags
+cost <= 6 wire bytes per fragment), ``Config`` objects inside ``read-next``
+replies, the ``*_batch`` envelopes — round-trips exactly (``decode_frame(encode_frame
 (m)) == m``; property-tested in ``tests/test_codec.py``). ``wire_size``
 computes the framed size *without* materialising the frame, so per-message
 accounting stays O(structure) with no big-payload copies.

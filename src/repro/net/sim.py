@@ -170,6 +170,10 @@ class Network:
     def __init__(self, seed: int = 0, latency: LatencyModel | None = None):
         self.rng = np.random.default_rng(seed)
         self.latency = latency or LatencyModel()
+        # store-wide GF(256) coding backend, read ambiently by every RSCode
+        # consumer built against this network (EcDap, repair, recon
+        # transfers). DSS.__init__ overrides it from DSSParams.coding_backend.
+        self.coding_backend = "auto"
         self.now = 0.0
         self._events: list[tuple[float, int, Callable[[], None]]] = []
         self._seq = itertools.count()

@@ -97,6 +97,9 @@ class ECCheckpointStore:
     algorithm: any of repro.core.store.ALGORITHMS — the paper's CoARESECF
     (fragmented + EC-DAPopt, the default) gives quorum writes, k-of-n
     restores, incremental block updates and live reconfiguration.
+    coding_backend: GF(256) backend for the RS data plane ("numpy" |
+    "kernel" | "auto"; see repro.erasure.rs) — checkpoint shards are exactly
+    the large-operand regime where the kernel path pays off.
     """
 
     def __init__(
@@ -111,6 +114,7 @@ class ECCheckpointStore:
         max_block: int = 1 << 20,
         latency: LatencyModel | None = None,
         indexed: bool = True,
+        coding_backend: str = "auto",
     ):
         self.dss = DSS(
             DSSParams(
@@ -123,6 +127,7 @@ class ECCheckpointStore:
                 max_block=max_block,
                 latency=latency or LatencyModel(),
                 indexed=indexed,
+                coding_backend=coding_backend,
             )
         )
         self.client = self.dss.client(client_id)

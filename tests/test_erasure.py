@@ -242,17 +242,19 @@ def test_encode_bytes_batch_matches_encode_bytes(values, k, m):
 
 def test_encode_batch_single_kernel_call(monkeypatch):
     """Acceptance (ISSUE 1): >= 32 blocks on the kernel backend issue exactly
-    ONE kernel matmul, bit-identical to per-block numpy encode."""
+    ONE kernel matmul, bit-identical to per-block numpy encode. The kernel
+    backend dispatches through ``gf256_coding_matmul`` (ISSUE 6), so that is
+    the seam counted here."""
     from repro.kernels.gf256_matmul import ops as gf_ops
 
     calls = []
-    real = gf_ops.gf256_matmul
+    real = gf_ops.gf256_coding_matmul
 
     def counting(A, B, **kw):
         calls.append(np.asarray(B).shape)
         return real(A, B, **kw)
 
-    monkeypatch.setattr(gf_ops, "gf256_matmul", counting)
+    monkeypatch.setattr(gf_ops, "gf256_coding_matmul", counting)
     rng = np.random.default_rng(3)
     code = RSCode(n=6, k=4, backend="kernel")
     data = rng.integers(0, 256, (32, 4, 16), dtype=np.uint8)
@@ -268,3 +270,54 @@ def test_bytes_rows_padding():
     assert rows_to_bytes(rows, orig) == b"hello world"
     rows0, o0 = bytes_to_rows(b"", 3)
     assert rows0.shape == (3, 1) and rows_to_bytes(rows0, o0) == b""
+
+
+# --------------------------------------------------- ISSUE 6 regressions
+def test_decode_bytes_rejects_truncated_fragment():
+    """Regression (ISSUE 6): a short/truncated fragment used to be silently
+    zero-padded into the decode operand and produce garbage bytes; a length
+    mismatch within an item's chosen fragments must raise."""
+    code = RSCode(n=6, k=4)
+    frags, orig = code.encode_bytes(b"x" * 4000)
+    good = {i: frags[i] for i in (0, 1, 2, 4)}
+    bad = dict(good)
+    bad[1] = bad[1][:-3]
+    with pytest.raises(ValueError, match="length mismatch"):
+        code.decode_bytes_batch([(bad, orig)])
+    with pytest.raises(ValueError, match="length mismatch"):
+        code.decode_bytes(bad, orig)
+    assert code.decode_bytes_batch([(good, orig)]) == [b"x" * 4000]
+
+
+def test_decode_prefers_systematic_subset(monkeypatch):
+    """Regression (ISSUE 6): when the k systematic fragments are all present
+    — in any order, or alongside parity fragments — every decode path must
+    take the copy fast path and perform NO GF matmul."""
+    import repro.erasure.rs as rs_mod
+
+    code = RSCode(n=6, k=4)
+    rng = np.random.default_rng(5)
+    data = rng.integers(0, 256, (4, 96), dtype=np.uint8)
+    coded = code.encode(data)
+    frags, orig = code.encode_bytes(b"hello" * 100)
+
+    calls = []
+    real = rs_mod.gf_matmul_np
+
+    def counting(A, B):
+        calls.append((np.asarray(A).shape, np.asarray(B).shape))
+        return real(A, B)
+
+    monkeypatch.setattr(rs_mod, "gf_matmul_np", counting)
+    # shuffled systematic indices, plus a parity row riding along
+    keep = [3, 0, 2, 1, 5]
+    np.testing.assert_array_equal(code.decode(coded[keep], keep), data)
+    batch = np.stack([coded[keep], coded[keep]])
+    np.testing.assert_array_equal(
+        code.decode_batch(batch, keep), np.stack([data, data])
+    )
+    # bytes form: all systematic present + a parity fragment in the reply
+    sub = {i: frags[i] for i in (0, 1, 2, 3, 5)}
+    assert code.decode_bytes_batch([(sub, orig)]) == [b"hello" * 100]
+    assert code.decode_bytes(sub, orig) == b"hello" * 100
+    assert calls == [], f"systematic replies must not matmul: {calls}"

@@ -3,7 +3,11 @@ import numpy as np
 import pytest
 
 from repro.erasure import RSCode, gf_matmul_np
-from repro.kernels.gf256_matmul.ops import gf256_matmul, rs_encode_parity
+from repro.kernels.gf256_matmul.ops import (
+    gf256_coding_matmul,
+    gf256_matmul,
+    rs_encode_parity,
+)
 from repro.kernels.gf256_matmul.ref import gf256_matmul_ref
 
 SHAPES = [
@@ -72,6 +76,47 @@ def test_rs_kernel_backend_matches_numpy_backend():
     coded = c_kr.encode(data)
     keep = [1, 3, 5, 7, 9, 10, 11, 12, 13, 0]
     np.testing.assert_array_equal(c_kr.decode(coded[keep], keep), data)
+
+
+def test_shape_validation_raises_valueerror():
+    """Regression (ISSUE 6): shape mismatches must raise ValueError — an
+    ``assert`` disappears under ``python -O`` and the mismatch would surface
+    as wrong-shaped kernel output."""
+    A = np.zeros((2, 4), dtype=np.uint8)
+    with pytest.raises(ValueError):
+        gf256_matmul(A, np.zeros((5, 16), dtype=np.uint8), interpret=True)
+    with pytest.raises(ValueError):
+        gf256_matmul(A, np.zeros(16, dtype=np.uint8), interpret=True)
+    with pytest.raises(ValueError):
+        gf256_coding_matmul(A, np.zeros((5, 16), dtype=np.uint8))
+    with pytest.raises(ValueError):
+        gf256_coding_matmul(np.zeros(4, dtype=np.uint8), np.zeros((4, 16), dtype=np.uint8))
+
+
+def test_degenerate_shapes():
+    """m == 0 / L == 0 / k == 0 products the storage path can produce
+    (parity-free codes, empty values) return empty matrices, not crashes."""
+    for ma, ka, L in [(0, 4, 16), (2, 4, 0), (0, 0, 0), (2, 0, 5)]:
+        A = np.zeros((ma, ka), dtype=np.uint8)
+        B = np.zeros((ka, L), dtype=np.uint8)
+        for fn in (
+            lambda a, b: gf256_matmul(a, b, interpret=True),
+            gf256_coding_matmul,
+        ):
+            out = np.asarray(fn(A, B))
+            assert out.shape == (ma, L) and out.dtype == np.uint8
+
+
+def test_coding_matmul_matches_lut():
+    """The production dispatcher (whatever backend it picks on this host) is
+    bit-identical to the numpy LUT reference across L sizes."""
+    rng = np.random.default_rng(11)
+    A = rng.integers(0, 256, (3, 7), dtype=np.uint8)
+    for L in (1, 7, 128, 1000, 5000):
+        B = rng.integers(0, 256, (7, L), dtype=np.uint8)
+        np.testing.assert_array_equal(
+            np.asarray(gf256_coding_matmul(A, B)), gf_matmul_np(A, B)
+        )
 
 
 def test_rs_encode_parity_wrapper():

@@ -9,6 +9,7 @@
 #   make bench-readpath  batched vs per-object read-path benchmark
 #   make bench-multifile cross-file Session fan-out vs legacy per-file ops
 #   make bench-gateway cross-client gateway merge vs direct per-client path
+#   make bench-scale   10^3/10^4-session zipfian harness, fast vs legacy engine
 #   make bench-smoke   every benchmark harness at its smallest point (CI);
 #                      FAILS if quorum-round counts regress versus
 #                      benchmarks/smoke_baseline.json (per-metric tolerance)
@@ -20,7 +21,8 @@
 PY ?= python
 
 .PHONY: test tier1 repair-tests batch-tests kernel-tests bench-repair \
-        bench-readpath bench-multifile bench-gateway bench-smoke lint dev-deps
+        bench-readpath bench-multifile bench-gateway bench-scale bench-smoke \
+        lint dev-deps
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -48,6 +50,9 @@ bench-multifile:
 
 bench-gateway:
 	PYTHONPATH=src $(PY) benchmarks/bench_gateway.py
+
+bench-scale:
+	PYTHONPATH=src $(PY) benchmarks/bench_scale.py
 
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.smoke --baseline benchmarks/smoke_baseline.json

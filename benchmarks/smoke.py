@@ -138,6 +138,26 @@ def run() -> list[dict]:
                           max_size=2048)
     rows.append({"bench": "smoke_kernels", "chunks": len(chunks)})
 
+    # --- scale family (ISSUE 7): zipfian session harness, both engines -----
+    # A small population through WorkloadGen on the fast and legacy network
+    # engines: the pair must replay an IDENTICAL trace (same rounds/bytes/
+    # virtual time — the fast path's correctness contract), and the fast
+    # engine's driver_events_per_sec is gated as a floor so a silent fall
+    # back to per-message driver costs fails CI.
+    from benchmarks.bench_scale import scale_trial, warmup as scale_warmup
+
+    scale_warmup()
+    fast_row = scale_trial(300, True, seed=9, files=16)
+    legacy_row = scale_trial(300, False, seed=9, files=16)
+    for key in ("events", "rpc_rounds", "msg_count", "MB_sent", "ops_done",
+                "virtual_makespan"):
+        assert fast_row[key] == legacy_row[key], (
+            f"fast/legacy trace divergence: {key} "
+            f"{fast_row[key]} != {legacy_row[key]}"
+        )
+    rows.append({**fast_row, "bench": "smoke_scale"})
+    rows.append({**legacy_row, "bench": "smoke_scale"})
+
     # --- coding family (ISSUE 6): kernel-backend batched-bytes throughput --
     # The one wall-clock metric the smoke gate checks as a FLOOR: a routing
     # regression that silently drops the data path back to the byte-LUT

@@ -16,9 +16,13 @@ from repro.core.repair import ObjectHealth, RepairController, RepairDaemon, prob
 from repro.core.server import StorageServer
 from repro.core.store import ALGORITHMS, DSS, ClientHandle, DSSParams
 from repro.core.tags import TAG0, Config, CSeqEntry, OpRecord, Tag, next_tag
+from repro.core.workload import CrashStorm, WorkloadGen, WorkloadSpec
 
 __all__ = [
     "Session",
+    "WorkloadGen",
+    "WorkloadSpec",
+    "CrashStorm",
     "Gateway",
     "GossipListener",
     "Workload",

@@ -89,6 +89,12 @@ class OpFuture:
     def done(self) -> bool:
         return self._done
 
+    def exception(self) -> BaseException | None:
+        """What the operation raised, if it failed — ``None`` while pending
+        or on success (concurrent.futures parity; lets a workload tally
+        failures without re-raising through ``result``)."""
+        return self._error
+
     def result(self) -> Any:
         """Step the virtual-time network until this operation completes,
         then return its result (or raise what the operation raised)."""
@@ -184,7 +190,10 @@ class Session:
         self.dss = dss
         self.cid = cid
         self.net = dss.net
-        self.handle = dss.client(cid)
+        self._handle = None  # built on first use (ISSUE 7): a gateway-
+        # attached session that only issues convenience ops never needs its
+        # own protocol client, and at 10^5 sessions eager construction is
+        # most of the setup cost.
         self.window = window
         self.via = via
         if via is not None and via.net is not self.net:
@@ -194,6 +203,13 @@ class Session:
             )
         self._pending: list[_Intent] = []
         self._drain_scheduled = False
+
+    @property
+    def handle(self):
+        """This session's own protocol client (lazily constructed)."""
+        if self._handle is None:
+            self._handle = self.dss.client(self.cid)
+        return self._handle
 
     # ------------------------------------------------------------- raw ops
     def submit(self, op: Generator, *, kind: str = "op",
@@ -262,17 +278,20 @@ class Session:
         (two writes to one file must stay two operations) and, for recons,
         on a different target configuration."""
         groups: list[list[_Intent]] = []
+        fids: set = set()  # fids of the current (last) group, O(1) break check
         for it in batch:
             g = groups[-1] if groups else None
             if (
                 g is None
                 or g[0].kind != it.kind
-                or any(prev.fid == it.fid for prev in g)
+                or it.fid in fids
                 or (it.kind == "recon" and g[0].arg.cfg_id != it.arg.cfg_id)
             ):
                 groups.append([it])
+                fids = {it.fid}
             else:
                 g.append(it)
+                fids.add(it.fid)
         return groups
 
     def _drain(self) -> Generator:

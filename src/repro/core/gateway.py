@@ -137,17 +137,20 @@ class Gateway:
         reads/stats dedupe and multicast; same-fid writes must stay two
         rounds). Recon runs still break on a different target config."""
         groups: list[list[_Intent]] = []
+        fids: set = set()  # fids of the current (last) group, O(1) break check
         for it in batch:
             g = groups[-1] if groups else None
             if (
                 g is None
                 or g[0].kind != it.kind
-                or (it.kind == "write" and any(p.fid == it.fid for p in g))
+                or (it.kind == "write" and it.fid in fids)
                 or (it.kind == "recon" and g[0].arg.cfg_id != it.arg.cfg_id)
             ):
                 groups.append([it])
+                fids = {it.fid}
             else:
                 g.append(it)
+                fids.add(it.fid)
         return groups
 
     def _rider_stats(self, it: _Intent, snaps: dict, t0: float, blocks: int,

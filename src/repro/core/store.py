@@ -54,6 +54,9 @@ class DSSParams:
     # (Pallas on TPU / jit'd XLA on CPU), or "auto" (size-based dispatch at
     # the measured crossover). See repro.erasure.rs.
     coding_backend: str = "auto"
+    # ISSUE 7 — vectorised one-event-per-fan-out network engine (trace-
+    # identical to the per-destination legacy path; False = ablation).
+    fast_net: bool = True
     latency: LatencyModel = dc_field(default_factory=LatencyModel)
 
 
@@ -242,7 +245,7 @@ class DSS:
                 f"unknown coding backend {p.coding_backend!r}; "
                 f"expected one of {CODING_BACKENDS}"
             )
-        self.net = Network(seed=p.seed, latency=p.latency)
+        self.net = Network(seed=p.seed, latency=p.latency, fast=p.fast_net)
         # ambient store-wide coding backend: every RSCode built against this
         # network (DAPs, repair controllers/daemons, recon transfers) reads it
         self.net.coding_backend = p.coding_backend

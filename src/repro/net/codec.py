@@ -307,3 +307,158 @@ def try_wire_size(obj: Any) -> int | None:
         return wire_size(obj)
     except CodecError:
         return None
+
+
+# ----------------------------------------------------- identity size memo
+class SizingMemo:
+    """Wire-size computation with an identity-keyed memo (ISSUE 7).
+
+    ``wire_size`` walks a message's whole structure; on the simulator's hot
+    path the SAME objects recur constantly — a broadcast payload framed once
+    per fan-out but re-framed on every retry round, stored tags / coded
+    elements / ``Config`` objects embedded in every ``ec-list`` and
+    ``read-next`` reply, a gateway's multicast entries. This memo caches the
+    body size of every *transitively immutable* node it walks (tuples of
+    immutables, ``Config``, and the leaf scalars they contain), keyed on
+    ``id(obj)`` with the object pinned in the memo so the id cannot be
+    recycled while the entry lives. Mutable containers (list / dict /
+    bytearray / memoryview / ndarray) are never cached — their size is
+    re-walked on every call — so in-place mutation can never yield a stale
+    size. The memo is bounded: it is cleared wholesale past ``max_entries``
+    entries or ``max_pinned_bytes`` of cumulative wire size (an identity
+    cache has no useful eviction order, and pinning keeps payload bytes
+    alive — the byte budget stops a long run from retaining every payload
+    it ever framed).
+
+    On top of the identity memo sits a *content* cache for whole messages:
+    protocol requests are built fresh every round, so they never identity-hit,
+    yet under a zipfian workload the same message **values** recur across
+    thousands of sessions. ``wire_size`` therefore also keys finished frames
+    by the message object itself (dict hash, C speed) — guarded by a
+    ``repr`` fingerprint, because Python equality is coarser than the wire
+    format: ``0 == False == 0.0`` yet the three frame differently. Two
+    objects that are ``==`` *and* share a ``repr`` have pairwise-equal leaves
+    of identical types, hence identical frames, so a fingerprint-verified hit
+    is exact; a mismatch just falls back to the walk. Only hashable,
+    transitively-immutable values with frames ≤ ``content_max_frame`` are
+    cached (big payload frames would make the repr check itself expensive).
+
+    Sizes are exactly ``wire_size``'s — the memo changes cost, never the
+    charged bytes (property-tested in ``tests/test_scalepath.py``).
+    """
+
+    __slots__ = (
+        "_memo", "_frame", "_pinned",
+        "max_entries", "max_pinned_bytes", "content_max_frame",
+    )
+
+    def __init__(self, max_entries: int = 1 << 18, max_pinned_bytes: int = 64 << 20,
+                 content_max_frame: int = 4096):
+        self._memo: dict[int, tuple[Any, int]] = {}
+        self._frame: dict[Any, tuple[str, int, int]] = {}
+        self._pinned = 0
+        self.max_entries = max_entries
+        self.max_pinned_bytes = max_pinned_bytes
+        self.content_max_frame = content_max_frame
+
+    def wire_size(self, obj: Any) -> int:
+        """``len(encode_frame(obj))`` without building the frame (memoized).
+        Raises :class:`CodecError` outside the vocabulary, like
+        :func:`wire_size`."""
+        hit = self._memo.get(id(obj))
+        if hit is not None and hit[0] is obj:
+            body = hit[1]
+            return _uvarint_size(body) + body
+        try:
+            ent = self._frame.get(obj)
+        except TypeError:  # unhashable content (list/dict/bytearray inside)
+            hashable = False
+        else:
+            hashable = True
+            if ent is not None and ent[0] == repr(obj):
+                # promote: repeated calls with this very object id-hit above
+                # instead of paying the repr fingerprint every time
+                self._remember(obj, ent[2])
+                return ent[1]
+        body, pure = self._size(obj)
+        total = _uvarint_size(body) + body
+        if hashable and pure and total <= self.content_max_frame:
+            frame = self._frame
+            if len(frame) >= self.max_entries:
+                frame.clear()
+            frame[obj] = (repr(obj), total, body)
+        return total
+
+    def _remember(self, obj: Any, size: int) -> None:
+        memo = self._memo
+        if len(memo) >= self.max_entries or self._pinned > self.max_pinned_bytes:
+            memo.clear()
+            self._pinned = 0
+        memo[id(obj)] = (obj, size)
+        self._pinned += size
+
+    def _size(self, obj: Any) -> tuple[int, bool]:
+        """(body size, transitively-immutable?) — only pure nodes are cached."""
+        if obj is None or obj is True or obj is False:
+            return 1, True
+        cls = type(obj)
+        if cls is int:
+            return 1 + _uvarint_size(_zigzag(obj)), True
+        if cls is float:
+            return 9, True
+        if cls is str:
+            n = len(obj) if obj.isascii() else len(obj.encode("utf-8"))
+            return 1 + _uvarint_size(n) + n, True
+        if cls is bytes:
+            n = len(obj)
+            return 1 + _uvarint_size(n) + n, True
+        if cls is tuple:
+            hit = self._memo.get(id(obj))
+            if hit is not None and hit[0] is obj:
+                return hit[1], True
+            size = 1 + _uvarint_size(len(obj))
+            pure = True
+            for x in obj:
+                s, p = self._size(x)
+                size += s
+                pure = pure and p
+            if pure:
+                self._remember(obj, size)
+            return size, pure
+        if cls is list:
+            size = 1 + _uvarint_size(len(obj))
+            for x in obj:
+                size += self._size(x)[0]
+            return size, False
+        if cls is dict:
+            size = 1 + _uvarint_size(len(obj))
+            for k, v in obj.items():
+                size += self._size(k)[0] + self._size(v)[0]
+            return size, False
+        if isinstance(obj, _config_cls()):
+            # frozen dataclass over immutable fields: always cacheable
+            hit = self._memo.get(id(obj))
+            if hit is not None and hit[0] is obj:
+                return hit[1], True
+            size = (
+                1
+                + self._size(obj.cfg_id)[0]
+                + self._size(obj.servers)[0]
+                + self._size(obj.dap)[0]
+                + self._size(obj.k)[0]
+                + self._size(obj.delta)[0]
+            )
+            self._remember(obj, size)
+            return size, True
+        # uncommon/mutable leaves: defer to the plain walk, never cache
+        if isinstance(obj, (bytearray, memoryview, np.ndarray)):
+            return _body_size(obj), False
+        if isinstance(obj, (int, bool)):  # bool/int subclasses
+            return _body_size(obj), True
+        if isinstance(obj, (float, str, bytes, np.integer, np.floating)):
+            return _body_size(obj), True
+        if isinstance(obj, (tuple, list)):  # subclasses: size, don't cache
+            return _body_size(obj), False
+        if isinstance(obj, dict):
+            return _body_size(obj), False
+        raise CodecError(f"not wire-encodable: {type(obj).__name__}")

@@ -21,17 +21,48 @@ which yields from per-config RPCs, ...). ``Network.spawn`` turns a generator
 into an ``OpFuture``; ``Network.run`` drives the event loop to quiescence.
 Replies arriving after a quorum resumed the generator are delivered to the
 runner and ignored — exactly the paper's "wait for a quorum, ignore the rest".
+
+Scale-out hot path (ISSUE 7)
+----------------------------
+At 10^5 sessions the driver itself — not the storage protocol — used to be
+the bottleneck: every message paid a heapq push, a Python closure, a scalar
+RNG draw and a codec walk. The engine now runs an allocation-light fan-out
+path by default (``Network(fast=True)``, ``DSSParams.fast_net``):
+
+* **one scheduled event per RPC fan-out** — a ``_FanOut`` cursor walks its
+  pre-computed arrival schedule, inline-draining consecutive arrivals while
+  they precede everything else in the heap, instead of one closure + heap
+  entry per destination;
+* **pooled RNG draws** — one ``rng.uniform(size=2B)`` per fan-out (outbound
+  props then reply props, in destination order). Drop flags come from a
+  dedicated ``_drop_rng`` stream and are *only drawn when ``drop_prob > 0``*,
+  so toggling drops no longer perturbs every latency sample;
+* **interned endpoints** — per-client [rounds, msgs, bytes] accounting and
+  NIC busy-until tracking live in flat rows indexed by interned endpoint id
+  (``client_counters`` survives as a read-only dict view), and fan-out
+  destination tuples resolve to interned server lists once, not per round;
+* **wire-size memo** — ``codec.SizingMemo`` frames immutable message
+  subtrees once, not once per recipient/retry.
+
+Determinism is the contract: for a fixed seed the fast path replays
+*byte- and event-identical* traces versus the per-destination legacy path
+(``fast=False``), which draws the same canonical per-fan-out stream but pays
+the seed implementation's per-message costs. ``tests/test_scalepath.py``
+pins trace identity on mixed workloads.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
+import math
 from dataclasses import dataclass
+from functools import partial
+from time import perf_counter
 from typing import Any, Callable, Generator
 
 import numpy as np
 
-from repro.net.codec import try_wire_size
+from repro.net.codec import CodecError, SizingMemo, try_wire_size
 
 
 def nbytes(obj: Any) -> int:
@@ -45,7 +76,9 @@ def nbytes(obj: Any) -> int:
     if isinstance(obj, (bytes, bytearray, memoryview)):
         return len(obj)
     if isinstance(obj, str):
-        return len(obj)
+        # UTF-8 byte length, not code-point count (ISSUE 7): "héllo" is six
+        # bytes on any real wire; len() undercounted every non-ASCII string.
+        return len(obj) if obj.isascii() else len(obj.encode("utf-8"))
     if isinstance(obj, bool):  # before int: bool is an int subclass
         return 1
     if isinstance(obj, (int, float)):
@@ -111,8 +144,12 @@ class RPC:
     destinations whose server is live at issue time (resuming immediately
     with ``{}`` when none are). This is the server-addressed pull the repair
     subsystem uses — "everyone who can answer", without hanging on crashed
-    servers. It assumes no crashes land between issue and reply (true for
-    the crash-injection tests; lossy nets should stick to quorum counts).
+    servers. A destination counted at issue that can no longer reply — it
+    crashed before the message landed, declined to answer, or its message /
+    reply was dropped — is *abandoned*: the required count shrinks so the op
+    resumes with whatever the remaining live servers return instead of
+    hanging (ISSUE 7; numeric ``need`` keeps the strict quorum-wait
+    semantics).
 
     ``per_dest`` (optional) overrides ``msg`` per server — used by the EC
     put-data, which ships a *different coded fragment* to each server."""
@@ -152,7 +189,10 @@ class OpFuture:
 
     @property
     def latency(self) -> float:
-        return self.end - self.start
+        """Virtual seconds from spawn to completion; ``nan`` while the op is
+        still in flight (``end`` is not meaningful before ``done`` — the old
+        ``end - start`` returned a nonsense negative value, ISSUE 7)."""
+        return self.end - self.start if self.done else math.nan
 
 
 class Server:
@@ -166,42 +206,228 @@ class Server:
         raise NotImplementedError
 
 
+class _RpcState:
+    """Shared per-RPC bookkeeping for both send paths: reply collection,
+    quorum resume, and ``need="alive"`` abandonment."""
+
+    __slots__ = (
+        "net", "gen", "fut", "on_done", "acct", "src_i",
+        "need", "alive", "counted", "replies", "resumed",
+    )
+
+    def __init__(self, net, gen, fut, on_done, acct, src_i, need, alive, counted):
+        self.net = net
+        self.gen = gen
+        self.fut = fut
+        self.on_done = on_done
+        self.acct = acct
+        self.src_i = src_i
+        self.need = need
+        self.alive = alive
+        # alive mode only: destinations that were live at ISSUE time — only
+        # these contributed to ``need``, so only these may abandon it.
+        self.counted = counted
+        self.replies: dict[str, Any] = {}
+        self.resumed = False
+
+    def deliver(self, sid: str, reply: Any) -> None:
+        if self.resumed:
+            return  # late reply past the quorum: ignored
+        self.replies[sid] = reply
+        if len(self.replies) >= self.need:
+            self.resumed = True
+            self.net._step(self.gen, self.fut, dict(self.replies), self.on_done)
+
+    def abandon(self, sid: str) -> None:
+        """A destination counted into an ``"alive"`` need can no longer
+        reply; shrink the requirement so the op cannot hang (ISSUE 7)."""
+        if self.resumed or not self.alive or sid not in self.counted:
+            return
+        self.need -= 1
+        if len(self.replies) >= self.need:
+            self.resumed = True
+            self.net._step(self.gen, self.fut, dict(self.replies), self.on_done)
+
+    def resume_empty(self) -> None:
+        if not self.resumed:
+            self.resumed = True
+            self.net._step(self.gen, self.fut, {}, self.on_done)
+
+
+class _FanOut:
+    """One fan-out's pre-computed arrival schedule, processed by a single
+    cursor event instead of one heap entry per destination (ISSUE 7).
+
+    ``seq0 .. seq0+nd-1`` were reserved at send time, one per delivered
+    arrival *in destination order* — exactly the sequence numbers the legacy
+    path's per-destination ``schedule`` calls would have consumed — so heap
+    tie-breaking (and therefore the whole trace) is identical. After
+    processing an arrival the cursor inline-drains the next one while it
+    still precedes every other pending event, advancing virtual time
+    directly; otherwise it re-enters the heap at the next arrival's reserved
+    (time, seq) slot."""
+
+    __slots__ = (
+        "net", "state", "sids", "srvs", "msgs", "shared_msg", "didx",
+        "rprops", "rdrop", "arr", "order", "seq0", "pos", "nd",
+    )
+
+    def __init__(self, net, state, sids, srvs, msgs, shared_msg, didx,
+                 rprops, rdrop, arr, order, seq0):
+        self.net = net
+        self.state = state
+        self.sids = sids
+        self.srvs = srvs
+        self.msgs = msgs            # per-dest payloads, or None when shared
+        self.shared_msg = shared_msg
+        self.didx = didx            # interned dest endpoint ids
+        self.rprops = rprops        # reply propagation draws (pooled)
+        self.rdrop = rdrop          # reply drop flags, or None when p == 0
+        self.arr = arr              # arrival times, destination order
+        self.order = order          # arrival processing order (stable sort)
+        self.seq0 = seq0
+        self.pos = 0
+        self.nd = len(order)
+
+    def fire(self) -> None:
+        net = self.net
+        arr = self.arr
+        order = self.order
+        seq0 = self.seq0
+        nd = self.nd
+        events = net._events
+        pos = self.pos
+        while True:
+            j = order[pos]
+            pos += 1
+            self.pos = pos
+            self._process(j)
+            if pos >= nd:
+                return
+            nj = order[pos]
+            t = arr[nj]
+            s = seq0 + nj
+            if t > net._run_limit:
+                heapq.heappush(events, (t, s, self.fire))
+                return
+            if events:
+                top = events[0]
+                if top[0] < t or (top[0] == t and top[1] < s):
+                    heapq.heappush(events, (t, s, self.fire))
+                    return
+            net.now = t
+            net.events_processed += 1
+
+    def _process(self, j: int) -> None:
+        net = self.net
+        state = self.state
+        srv = self.srvs[j]
+        sid = self.sids[j]
+        if srv.crashed:
+            state.abandon(sid)
+            return
+        msg = self.shared_msg if self.msgs is None else self.msgs[j]
+        if net.profile_protocol:
+            t0 = perf_counter()
+            reply = srv.handle(state.fut.client, msg)
+            net.protocol_time += perf_counter() - t0
+        else:
+            reply = srv.handle(state.fut.client, msg)
+        if reply is None:
+            state.abandon(sid)
+            return
+        rsize = net._wire(reply)
+        net.msg_count += 1
+        net.bytes_sent += rsize
+        net._acct_add(state.acct, 0, 1, rsize)
+        deliver = self.rdrop is None or not self.rdrop[j]
+        rdelay = net.latency.server_compute + net._transmit_prop(
+            self.didx[j], state.src_i, rsize, self.rprops[j], deliver
+        )
+        if not deliver:
+            state.abandon(sid)
+            return
+        net.schedule(rdelay, partial(state.deliver, sid, reply))
+
+
 class Network:
-    def __init__(self, seed: int = 0, latency: LatencyModel | None = None):
+    def __init__(self, seed: int = 0, latency: LatencyModel | None = None,
+                 fast: bool = True):
         self.rng = np.random.default_rng(seed)
+        # Drop decisions draw from their OWN stream so that drop_prob == 0
+        # consumes nothing and toggling drops never perturbs a latency sample
+        # (ISSUE 7 — the old path burned one rng.random() per message even
+        # with drops disabled).
+        self._drop_rng = np.random.default_rng([int(seed), 0x5EED])
         self.latency = latency or LatencyModel()
+        # fast=True (default): vectorised one-event-per-fan-out engine.
+        # fast=False: the seed implementation's per-destination closures —
+        # the ablation baseline (DSSParams.fast_net). Both replay identical
+        # traces for a fixed seed.
+        self.fast_rpc = fast
         # store-wide GF(256) coding backend, read ambiently by every RSCode
         # consumer built against this network (EcDap, repair, recon
         # transfers). DSS.__init__ overrides it from DSSParams.coding_backend.
         self.coding_backend = "auto"
         self.now = 0.0
         self._events: list[tuple[float, int, Callable[[], None]]] = []
-        self._seq = itertools.count()
+        self._seq = 0
+        self._run_limit = math.inf
         self.servers: dict[str, Server] = {}
         self.futures: list[OpFuture] = []
         self._op_ids = itertools.count()
         self.msg_count = 0
         self.bytes_sent = 0
+        # driver-side work: every event the engine executed (heap pops plus
+        # the fast path's inline-drained arrivals — identical totals on both
+        # paths, so events/s is an honest cross-path throughput metric).
+        self.events_processed = 0
         # quorum rounds: one per RPC effect issued (a fan-out + wait-for-need
         # counts once, however many servers it touches) — the unit the paper's
         # §VII-D read-overhead argument is about.
         self.rpc_rounds = 0
-        # per-client [rounds, msgs, bytes] — both directions of an op's RPCs
+        # per-client [rounds, msgs, bytes] accounting lives in flat rows
+        # indexed by interned endpoint id; both directions of an op's RPCs
         # are attributed to the issuing client, so the Session API can report
         # per-operation OpStats under concurrent multi-client workloads.
-        self.client_counters: dict[str, list[int]] = {}
+        # Plain int lists, not an ndarray: the hot path bumps one row's
+        # scalars per message, where numpy element access costs ~1µs a touch.
+        # ``client_counters`` exposes the legacy dict-of-list view.
+        self._ep_idx: dict[str, int] = {}
+        self._acct: list[list[int]] = [[0, 0, 0] for _ in range(64)]
+        # NIC busy-until times, indexed by interned endpoint id. Plain lists,
+        # not ndarrays: the hot path reads/writes them one scalar at a time.
+        self._busy_out: list[float] = [0.0] * 64
+        self._busy_in: list[float] = [0.0] * 64
+        self._known_clients: dict[str, None] = {}  # insertion-ordered set
+        # per-client resolved accounting target, invalidated by attribute():
+        # ("s", row_index) for a lone client, ("m", index_array) with riders.
+        self._rows_cache: dict[str, tuple[str, Any]] = {}
         # attribution map (ISSUE 4): endpoint -> rider clients. While set,
         # every RPC the endpoint issues ALSO advances each rider's counters —
         # how a gateway's merged round is attributed to the clients it serves
         # (each rider sees the shared round once, same semantics as OpStats
         # sharing under a coalesced Session batch).
         self.client_attribution: dict[str, tuple[str, ...]] = {}
-        # per-endpoint NIC occupancy: (endpoint, "out"|"in") -> busy-until
-        self._busy: dict[tuple[str, str], float] = {}
+        self._sizer = SizingMemo()
+        # fan-out destination cache: cfg.servers tuples are reused across
+        # thousands of rounds, so the existence filter + endpoint interning
+        # is resolved once per distinct tuple (identity-keyed, tuple pinned;
+        # invalidated when topology grows). Lists are never cached.
+        self._dest_cache: dict[int, tuple] = {}
+        # opt-in wall-clock split for benchmarks: with ``profile_protocol``
+        # set, seconds spent inside protocol code — op-generator bodies and
+        # ``Server.handle`` — accumulate here, so a driver can report
+        # *driver* time (wall minus protocol) for the engine comparison
+        # ISSUE 7 is about. Off by default: two perf_counter() calls per
+        # event are noise the normal path shouldn't pay.
+        self.profile_protocol = False
+        self.protocol_time = 0.0
 
     # -- topology ------------------------------------------------------------
     def add_server(self, server: Server) -> None:
         self.servers[server.sid] = server
+        self._dest_cache.clear()  # cached fan-outs may now resolve more dests
 
     def crash(self, sid: str) -> None:
         self.servers[sid].crashed = True
@@ -214,18 +440,31 @@ class Network:
 
     # -- event loop ------------------------------------------------------------
     def schedule(self, delay: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._events, (self.now + delay, next(self._seq), fn))
+        # clamp: a negative (or NaN) delay must not reorder virtual time —
+        # events fire no earlier than now (ISSUE 7).
+        t = self.now + delay if delay > 0.0 else self.now
+        s = self._seq
+        self._seq = s + 1
+        heapq.heappush(self._events, (t, s, fn))
 
     def run(self, until: float | None = None, max_events: int = 50_000_000) -> None:
+        limit = math.inf if until is None else until
+        prev = self._run_limit
+        self._run_limit = limit
+        events = self._events
         n = 0
-        while self._events and n < max_events:
-            t, _, fn = self._events[0]
-            if until is not None and t > until:
-                break
-            heapq.heappop(self._events)
-            self.now = t
-            fn()
-            n += 1
+        try:
+            while events and n < max_events:
+                t, _, fn = events[0]
+                if t > limit:
+                    break
+                heapq.heappop(events)
+                self.now = t
+                self.events_processed += 1
+                fn()
+                n += 1
+        finally:
+            self._run_limit = prev
         if n >= max_events:  # pragma: no cover
             raise RuntimeError("simulator event budget exhausted (livelock?)")
 
@@ -238,13 +477,80 @@ class Network:
             return False
         t, _, fn = heapq.heappop(self._events)
         self.now = t
+        self.events_processed += 1
         fn()
         return True
 
+    # -- accounting ------------------------------------------------------------
+    def _intern(self, endpoint: str) -> int:
+        """Stable small-int id for an endpoint name; grows the flat
+        accounting/busy arrays on demand (indices stay valid across growth)."""
+        idx = self._ep_idx.get(endpoint)
+        if idx is None:
+            idx = len(self._ep_idx)
+            self._ep_idx[endpoint] = idx
+            if idx >= len(self._acct):
+                self._acct.extend([0, 0, 0] for _ in range(len(self._acct)))
+                self._busy_out.extend([0.0] * len(self._busy_out))
+                self._busy_in.extend([0.0] * len(self._busy_in))
+        return idx
+
+    def _acct_rows(self, client: str) -> tuple[str, Any]:
+        """Resolved accounting target for RPCs issued by ``client``: its own
+        row plus any attributed riders' rows (captured at issue time, like
+        the legacy path's ``setdefault`` list — late replies keep crediting
+        the riders of the round that sent them)."""
+        entry = self._rows_cache.get(client)
+        if entry is None:
+            i = self._intern(client)
+            self._known_clients[client] = None
+            riders = self.client_attribution.get(client)
+            if riders:
+                for r in riders:
+                    self._known_clients[r] = None
+                entry = ("m", (i, *(self._intern(r) for r in riders)))
+            else:
+                entry = ("s", i)
+            self._rows_cache[client] = entry
+        return entry
+
+    def _acct_add(self, rows: tuple[str, Any], dr: int, dm: int, db: int) -> None:
+        kind, v = rows
+        a = self._acct
+        if kind == "s":
+            row = a[v]
+            if dr:
+                row[0] += dr
+            if dm:
+                row[1] += dm
+                row[2] += db
+        else:
+            for i in v:
+                row = a[i]
+                if dr:
+                    row[0] += dr
+                if dm:
+                    row[1] += dm
+                    row[2] += db
+
+    @property
+    def client_counters(self) -> dict[str, list[int]]:
+        """Read-only snapshot of per-client [rounds, msgs, bytes] — the
+        legacy dict view over the flat accounting array. Mutations to the
+        returned dict are NOT written back; use ``client_totals``."""
+        a = self._acct
+        out = {}
+        for c in self._known_clients:
+            out[c] = list(a[self._ep_idx[c]])
+        return out
+
     def client_totals(self, client: str) -> tuple[int, int, int]:
         """(quorum rounds, messages, bytes) attributed to ``client`` so far."""
-        acct = self.client_counters.get(client)
-        return (0, 0, 0) if acct is None else (acct[0], acct[1], acct[2])
+        i = self._ep_idx.get(client)
+        if i is None:
+            return (0, 0, 0)
+        row = self._acct[i]
+        return (row[0], row[1], row[2])
 
     def attribute(self, endpoint: str, riders=None) -> None:
         """Set (or clear, with ``riders=None``/empty) the attribution map for
@@ -256,6 +562,7 @@ class Network:
             self.client_attribution[endpoint] = riders
         else:
             self.client_attribution.pop(endpoint, None)
+        self._rows_cache.pop(endpoint, None)
 
     # -- message timing --------------------------------------------------------
     def transmit_delay(self, src: str, dst: str, size: int, deliver: bool = True) -> float:
@@ -269,17 +576,42 @@ class Network:
         message lost in flight: the sender's uplink was still consumed, but
         nothing queues at (or arrives to) the receiver."""
         lat = self.latency
-        tx = size / lat.bandwidth
         prop = float(self.rng.uniform(lat.base_lo, lat.base_hi))
+        return self._transmit_prop(
+            self._intern(src), self._intern(dst), size, prop, deliver
+        )
+
+    def _transmit_prop(
+        self, src_i: int, dst_i: int, size: int, prop: float, deliver: bool
+    ) -> float:
+        """``transmit_delay`` over interned endpoint ids with the propagation
+        draw supplied by the caller (the fan-out paths pool their draws)."""
+        lat = self.latency
+        tx = size / lat.bandwidth
         if not lat.serialize_links:
             return prop + tx
-        t_send = max(self.now, self._busy.get((src, "out"), 0.0))
-        self._busy[(src, "out")] = t_send + tx
+        bo = self._busy_out
+        now = self.now
+        b = bo[src_i]
+        t_send = now if now > b else b
+        bo[src_i] = t_send + tx
         if not deliver:
             return 0.0
-        t_recv = max(t_send + prop, self._busy.get((dst, "in"), 0.0))
-        self._busy[(dst, "in")] = t_recv + tx
-        return (t_recv + tx) - self.now
+        bi = self._busy_in
+        t0 = t_send + prop
+        b2 = bi[dst_i]
+        t_recv = t0 if t0 > b2 else b2
+        bi[dst_i] = t_recv + tx
+        return (t_recv + tx) - now
+
+    def _wire(self, obj: Any) -> int:
+        """Memoized ``msg_wire_size`` (fast path): codec frame size with
+        immutable subtrees cached, ``nbytes`` heuristic outside the
+        vocabulary."""
+        try:
+            return self._sizer.wire_size(obj)
+        except CodecError:
+            return nbytes(obj)
 
     # -- op driving ------------------------------------------------------------
     def spawn(
@@ -316,15 +648,22 @@ class Network:
         send_value: Any,
         on_done: Callable[[OpFuture], None] | None,
     ) -> None:
+        prof = self.profile_protocol
+        if prof:
+            t0 = perf_counter()
         try:
             effect = gen.send(send_value)
         except StopIteration as stop:
+            if prof:
+                self.protocol_time += perf_counter() - t0
             fut.done = True
             fut.end = self.now
             fut.result = stop.value
             if on_done is not None:
                 on_done(fut)
             return
+        if prof:
+            self.protocol_time += perf_counter() - t0
         if isinstance(effect, Sleep):
             self.schedule(effect.duration, lambda: self._step(gen, fut, None, on_done))
         elif isinstance(effect, RPC):
@@ -360,81 +699,264 @@ class Network:
         self.rpc_rounds += 1
         # the issuing client's account, plus any riders attributed to it
         # (``attribute``): a gateway's merged round counts once per rider.
-        accts = [self.client_counters.setdefault(fut.client, [0, 0, 0])]
-        for rider in self.client_attribution.get(fut.client, ()):
-            accts.append(self.client_counters.setdefault(rider, [0, 0, 0]))
-        for a in accts:
-            a[0] += 1
-        replies: dict[str, Any] = {}
-        state = {"resumed": False}
+        acct = self._acct_rows(fut.client)
+        self._acct_add(acct, 1, 0, 0)
         if rpc.need == "alive":
+            alive_mode = True
             need = sum(
                 1
                 for sid in rpc.dests
                 if (srv := self.servers.get(sid)) is not None and not srv.crashed
             )
+            counted = frozenset(
+                sid
+                for sid in rpc.dests
+                if (srv := self.servers.get(sid)) is not None and not srv.crashed
+            )
         else:
+            alive_mode = False
             need = rpc.need
+            counted = frozenset()
         need = min(need, len(rpc.dests))
-
-        def deliver_reply(sid: str, reply: Any) -> None:
-            if state["resumed"]:
-                return  # late reply past the quorum: ignored
-            replies[sid] = reply
-            if len(replies) >= need:
-                state["resumed"] = True
-                self._step(gen, fut, dict(replies), on_done)
-
-        def send_all() -> None:
-            # broadcast fan-outs ship ONE payload to every server — size it
-            # once, not once per destination (it's the sim's hottest path)
-            shared_size = msg_wire_size(rpc.msg) if rpc.per_dest is None else None
-            for sid in rpc.dests:
-                srv = self.servers.get(sid)
-                if srv is None:
-                    continue
-                msg = rpc.msg if rpc.per_dest is None else rpc.per_dest[sid]
-                self.msg_count += 1
-                size = shared_size if shared_size is not None else msg_wire_size(msg)
-                self.bytes_sent += size
-                for a in accts:
-                    a[1] += 1
-                    a[2] += size
-                dropped = self.rng.random() < self.latency.drop_prob
-                delay = self.transmit_delay(fut.client, sid, size, deliver=not dropped)
-                if dropped:
-                    continue
-
-                def arrive(srv=srv, sid=sid, msg=msg) -> None:
-                    if srv.crashed:
-                        return
-                    reply = srv.handle(fut.client, msg)
-                    if reply is None:
-                        return
-                    rsize = msg_wire_size(reply)
-                    self.msg_count += 1
-                    self.bytes_sent += rsize
-                    for a in accts:
-                        a[1] += 1
-                        a[2] += rsize
-                    rdropped = self.rng.random() < self.latency.drop_prob
-                    rdelay = self.latency.server_compute + self.transmit_delay(
-                        sid, fut.client, rsize, deliver=not rdropped
-                    )
-                    if rdropped:
-                        return
-                    self.schedule(rdelay, lambda: deliver_reply(sid, reply))
-
-                self.schedule(delay, arrive)
-
-        self.schedule(rpc.pre_delay, send_all)
+        state = _RpcState(
+            self, gen, fut, on_done, acct, self._intern(fut.client),
+            need, alive_mode, counted,
+        )
+        send = self._fast_send if self.fast_rpc else self._legacy_send
+        self.schedule(rpc.pre_delay, partial(send, rpc, state))
         if need <= 0:
             # nothing can (or needs to) reply — messages still go out, but the
             # op resumes immediately with no replies (guarded against a
             # straggler reply re-resuming the generator).
-            def resume_empty() -> None:
-                if not state["resumed"]:
-                    state["resumed"] = True
-                    self._step(gen, fut, {}, on_done)
+            self.schedule(rpc.pre_delay, state.resume_empty)
 
-            self.schedule(rpc.pre_delay, resume_empty)
+    # Both send paths share one canonical RNG schedule per fan-out over the B
+    # destinations that exist: 2B latency props from ``rng`` (outbound then
+    # reply, destination order), then — only when drop_prob > 0 — 2B drop
+    # draws from ``_drop_rng`` in the same layout. The fast path draws them
+    # as two vectors; the legacy path draws the SAME values as 2B scalars
+    # (numpy Generator streams are bit-identical either way), so the two
+    # engines replay identical traces while paying very different driver
+    # costs.
+
+    def _fast_send(self, rpc: RPC, state: _RpcState) -> None:
+        lat = self.latency
+        dests = rpc.dests
+        cache = self._dest_cache
+        ent = cache.get(id(dests))
+        if ent is not None and ent[0] is dests:
+            sids, srvs, didx = ent[1], ent[2], ent[3]
+        else:
+            servers = self.servers
+            sids = []
+            srvs = []
+            for sid in dests:
+                srv = servers.get(sid)
+                if srv is not None:
+                    sids.append(sid)
+                    srvs.append(srv)
+            didx = [self._intern(s) for s in sids]
+            if type(dests) is tuple:  # lists may mutate: never cache them
+                if len(cache) >= 4096:
+                    cache.clear()
+                cache[id(dests)] = (dests, sids, srvs, didx)
+        B = len(sids)
+        if B == 0:
+            return
+        # frame sizes (broadcasts sized once) + bulk accounting
+        if rpc.per_dest is None:
+            msgs = None
+            sizes = None
+            shared = self._wire(rpc.msg)
+            total = shared * B
+        else:
+            msgs = [rpc.per_dest[sid] for sid in sids]
+            sizes = [self._wire(m) for m in msgs]
+            shared = 0
+            total = sum(sizes)
+        self.msg_count += B
+        self.bytes_sent += total
+        self._acct_add(state.acct, 0, B, total)
+        # pooled draws (canonical stream, see above); everything downstream is
+        # scalar arithmetic — at quorum-sized fan-outs (B ~ 5-15) a Python
+        # loop over the pooled values beats vector ops, and it replays the
+        # legacy path's per-message float sequence *by construction*.
+        props = self.rng.uniform(lat.base_lo, lat.base_hi, 2 * B).tolist()
+        p = lat.drop_prob
+        flags = (self._drop_rng.random(2 * B) < p).tolist() if p > 0.0 else None
+        now = self.now
+        bw = lat.bandwidth
+        serialize = lat.serialize_links
+        bi = self._busy_in
+        if serialize:
+            # sender uplink: each message queues behind the previous one;
+            # ``busy`` never falls below ``now`` after the first max, so
+            # hoisting the max out of the loop is exact.
+            bo = self._busy_out
+            src_i = state.src_i
+            busy = bo[src_i]
+            if now > busy:
+                busy = now
+        arr: list[float] = []
+        if flags is None:
+            # no drops (the common case): every message is delivered, so the
+            # destination views ARE the originals — only arrivals to compute
+            for j in range(B):
+                tx = (shared if sizes is None else sizes[j]) / bw
+                if serialize:
+                    t_send = busy
+                    busy = t_send + tx
+                    t0 = t_send + props[j]
+                    di = didx[j]
+                    b2 = bi[di]
+                    t_recv = t0 if t0 > b2 else b2
+                    done = t_recv + tx
+                    bi[di] = done
+                    delay = done - now
+                else:
+                    delay = props[j] + tx
+                arr.append(now + delay if delay > 0.0 else now)
+            d_sids, d_srvs, d_msgs, d_didx = sids, srvs, msgs, didx
+            d_rprops = props[B:]
+            d_rdrop = None
+        else:
+            # delivered arrivals (outbound drops still consume the uplink)
+            d_sids = []
+            d_srvs = []
+            d_msgs = None if msgs is None else []
+            d_didx = []
+            d_rprops = []
+            d_rdrop = []
+            for j in range(B):
+                tx = (shared if sizes is None else sizes[j]) / bw
+                if serialize:
+                    t_send = busy
+                    busy = t_send + tx
+                if flags[j]:
+                    continue
+                if serialize:
+                    t0 = t_send + props[j]
+                    di = didx[j]
+                    b2 = bi[di]
+                    t_recv = t0 if t0 > b2 else b2
+                    done = t_recv + tx
+                    bi[di] = done
+                    delay = done - now
+                else:
+                    delay = props[j] + tx
+                arr.append(now + delay if delay > 0.0 else now)
+                d_sids.append(sids[j])
+                d_srvs.append(srvs[j])
+                if d_msgs is not None:
+                    d_msgs.append(msgs[j])
+                d_didx.append(didx[j])
+                d_rprops.append(props[B + j])
+                d_rdrop.append(flags[B + j])
+        if serialize:
+            bo[src_i] = busy
+        nd = len(arr)
+        if nd == 0:
+            self._abandon_drops(state, sids, flags)
+            return
+        # reserve the arrival sequence numbers the legacy path would have
+        # consumed (contiguous, destination order) and enter the heap at the
+        # earliest arrival only.
+        seq0 = self._seq
+        self._seq = seq0 + nd
+        order = [0] if nd == 1 else sorted(range(nd), key=arr.__getitem__)
+        fan = _FanOut(
+            self, state, d_sids, d_srvs, d_msgs,
+            rpc.msg if msgs is None else None,
+            d_didx, d_rprops, d_rdrop, arr, order, seq0,
+        )
+        j0 = order[0]
+        heapq.heappush(self._events, (arr[j0], seq0 + j0, fan.fire))
+        self._abandon_drops(state, sids, flags)
+
+    def _abandon_drops(self, state: _RpcState, sids: list[str], flags) -> None:
+        """alive-mode bookkeeping for outbound drops (after arrival seqs are
+        reserved, so resume-triggered schedules order identically on both
+        paths)."""
+        if flags is None or not state.alive:
+            return
+        for j, sid in enumerate(sids):
+            if flags[j]:
+                state.abandon(sid)
+
+    def _legacy_send(self, rpc: RPC, state: _RpcState) -> None:
+        """Seed-style per-destination send: one closure + heap entry + scalar
+        RNG draws + un-memoized codec walk per message. Kept as the ablation
+        baseline (``fast=False`` / ``DSSParams.fast_net=False``); draws the
+        same canonical per-fan-out stream as the fast path so traces are
+        bit-identical — it just pays the seed implementation's per-message
+        costs to earn them."""
+        lat = self.latency
+        pairs = [
+            (sid, srv)
+            for sid in rpc.dests
+            if (srv := self.servers.get(sid)) is not None
+        ]
+        B = len(pairs)
+        if B == 0:
+            return
+        lo, hi = lat.base_lo, lat.base_hi
+        oprops = [float(self.rng.uniform(lo, hi)) for _ in range(B)]
+        rprops = [float(self.rng.uniform(lo, hi)) for _ in range(B)]
+        p = lat.drop_prob
+        if p > 0.0:
+            odrop = [bool(self._drop_rng.random() < p) for _ in range(B)]
+            rdrop = [bool(self._drop_rng.random() < p) for _ in range(B)]
+        else:
+            odrop = rdrop = None
+        shared = msg_wire_size(rpc.msg) if rpc.per_dest is None else None
+        client = state.fut.client
+        src_i = state.src_i
+        dropped_sids: list[str] = []
+        for j, (sid, srv) in enumerate(pairs):
+            msg = rpc.msg if rpc.per_dest is None else rpc.per_dest[sid]
+            size = shared if shared is not None else msg_wire_size(msg)
+            self.msg_count += 1
+            self.bytes_sent += size
+            self._acct_add(state.acct, 0, 1, size)
+            lost = odrop is not None and odrop[j]
+            delay = self._transmit_prop(
+                src_i, self._intern(sid), size, oprops[j], not lost
+            )
+            if lost:
+                dropped_sids.append(sid)
+                continue
+
+            def arrive(
+                srv=srv,
+                sid=sid,
+                msg=msg,
+                rprop=rprops[j],
+                rlost=rdrop is not None and rdrop[j],
+            ) -> None:
+                if srv.crashed:
+                    state.abandon(sid)
+                    return
+                if self.profile_protocol:
+                    t0 = perf_counter()
+                    reply = srv.handle(client, msg)
+                    self.protocol_time += perf_counter() - t0
+                else:
+                    reply = srv.handle(client, msg)
+                if reply is None:
+                    state.abandon(sid)
+                    return
+                rsize = msg_wire_size(reply)
+                self.msg_count += 1
+                self.bytes_sent += rsize
+                self._acct_add(state.acct, 0, 1, rsize)
+                rdelay = lat.server_compute + self._transmit_prop(
+                    self._intern(sid), src_i, rsize, rprop, not rlost
+                )
+                if rlost:
+                    state.abandon(sid)
+                    return
+                self.schedule(rdelay, lambda: state.deliver(sid, reply))
+
+            self.schedule(delay, arrive)
+        for sid in dropped_sids:
+            state.abandon(sid)

@@ -1,0 +1,272 @@
+"""Scale-out hot path (ISSUE 7): fast/legacy trace identity, the sizing
+memo's exactness, the server reply cache, the workload harness, and the
+satellite fixes (nbytes UTF-8, latency-nan, schedule clamp, drop-stream
+isolation, alive-mode abandonment)."""
+import math
+
+import numpy as np
+
+from repro.core import DSS, DSSParams, CrashStorm, WorkloadGen, WorkloadSpec
+from repro.net.codec import SizingMemo, wire_size
+from repro.net.sim import RPC, LatencyModel, Network, OpFuture, Server, nbytes
+
+
+class Echo(Server):
+    def handle(self, sender, msg):
+        return ("echo", self.sid, msg)
+
+
+def _mknet(fast, n=5, seed=3, **lat):
+    net = Network(seed=seed, latency=LatencyModel(**lat), fast=fast)
+    for i in range(n):
+        net.add_server(Echo(f"s{i}"))
+    return net
+
+
+def _net_fingerprint(net):
+    return (
+        round(net.now, 12),
+        net.events_processed,
+        net.rpc_rounds,
+        net.msg_count,
+        net.bytes_sent,
+        net.client_counters,
+    )
+
+
+# --------------------------------------------------- fast == legacy traces
+def _workload_report(fast, *, sessions=40, seed=11, gateway=False, storms=()):
+    dss = DSS(DSSParams(
+        algorithm="coaresecf", n_servers=6, parity_m=2, seed=5,
+        min_block=256, avg_block=512, max_block=2048,
+        indexed=True, batched=True, fast_net=fast,
+    ))
+    spec = WorkloadSpec(sessions=sessions, files=8, file_size=512,
+                        read_fraction=0.7, ops_per_session=2, storms=storms)
+    via = dss.gateway() if gateway else None
+    rep = WorkloadGen(spec, seed=seed).run(dss, via=via)
+    if via is not None:
+        via.stop()
+    return rep, _net_fingerprint(dss.net)
+
+
+def test_trace_identity_mixed_workload():
+    # reads + writes + churn through the Session tier: every counter, every
+    # virtual timestamp, and the per-client accounting must match exactly.
+    a = _workload_report(True)
+    b = _workload_report(False)
+    assert a == b
+
+
+def test_trace_identity_under_crash_storm():
+    storms = (CrashStorm(at=0.02, frac=0.4, duration=0.03),)
+    a = _workload_report(True, storms=storms, seed=13)
+    b = _workload_report(False, storms=storms, seed=13)
+    assert a == b
+
+
+def test_trace_identity_via_gateway():
+    a = _workload_report(True, sessions=20, gateway=True)
+    b = _workload_report(False, sessions=20, gateway=True)
+    assert a == b
+
+
+def _drop_trial(fast):
+    net = _mknet(fast, n=5, seed=9, drop_prob=0.25)
+    dests = tuple(net.servers)
+
+    def op(k):
+        if k % 3 == 0:  # per-dest payloads exercise the non-shared sizing
+            per = {s: ("ping", k, s) for s in dests}
+            replies = yield RPC(dests=dests, msg=("ping", k, "*"),
+                                need=2, per_dest=per)
+        else:
+            replies = yield RPC(dests=dests, msg=("ping", k), need=2)
+        return sorted(replies)
+
+    futs = [net.spawn(op(k), client=f"c{k % 3}") for k in range(30)]
+    net.run()
+    return ([(f.done, f.result) for f in futs], _net_fingerprint(net))
+
+
+def test_trace_identity_with_drops():
+    # drop_prob > 0: both engines burn the same drop stream and lose the
+    # same messages; stuck-vs-done status per op must agree too.
+    assert _drop_trial(True) == _drop_trial(False)
+
+
+def _alive_crash_trial(fast):
+    net = _mknet(fast, n=3, seed=5)
+
+    def op():
+        replies = yield RPC(dests=("s0", "s1", "s2"), msg=("ping",),
+                            need="alive")
+        return set(replies)
+
+    fut = net.spawn(op())
+    # s1 was live at issue time (counted into need) but crashes before the
+    # message lands: the op must resume with the survivors, not hang.
+    net.schedule(0.0, lambda: net.crash("s1"))
+    net.run()
+    assert fut.done, "alive-mode op hung on a crash between issue and reply"
+    return fut.result
+
+
+def test_alive_need_crash_between_issue_and_reply():
+    assert _alive_crash_trial(True) == _alive_crash_trial(False) == {"s0", "s2"}
+
+
+# ------------------------------------------------------------- satellites
+def test_nbytes_utf8_length():
+    s = "héllo"  # 6 UTF-8 bytes, 5 code points
+    assert nbytes(s) == len(s.encode("utf-8")) == 6
+    assert nbytes("plain") == 5
+
+
+def test_opfuture_latency_nan_until_done():
+    fut = OpFuture(op_id=0)
+    fut.start = 5.0
+    assert math.isnan(fut.latency)
+    fut.done = True
+    fut.end = 7.5
+    assert fut.latency == 2.5
+
+
+def test_schedule_negative_delay_clamped():
+    net = Network(seed=0)
+    order = []
+    net.schedule(0.001, lambda: order.append(("late", net.now)))
+    net.schedule(-5.0, lambda: order.append(("clamped", net.now)))
+    net.run()
+    # the negative delay fires NOW (no time travel), before the later event
+    assert order == [("clamped", 0.0), ("late", 0.001)]
+
+
+def _latency_trace(fast, burn):
+    net = _mknet(fast, n=4, seed=21)  # drop_prob = 0
+    if burn:
+        net._drop_rng.random(1000)  # advance the drop stream arbitrarily
+
+    def op(k):
+        replies = yield RPC(dests=tuple(net.servers), msg=("ping", k), need=3)
+        return len(replies)
+
+    for k in range(10):
+        net.spawn(op(k), client="c")
+    net.run()
+    return [f.latency for f in net.futures], net.now
+
+
+def test_drop_stream_isolated_when_prob_zero():
+    # satellite (c): with drop_prob == 0 no drop draw is consumed per
+    # message, so the drop stream's position cannot affect any latency.
+    for fast in (True, False):
+        assert _latency_trace(fast, False) == _latency_trace(fast, True)
+
+
+# ------------------------------------------------------------ sizing memo
+def _rand_obj(rng, depth=0):
+    kinds = 8 if depth < 3 else 6
+    r = int(rng.integers(0, kinds))
+    if r == 0:
+        return None
+    if r == 1:
+        return int(rng.integers(-(2 ** 40), 2 ** 40))
+    if r == 2:
+        return float(rng.normal())
+    if r == 3:
+        return rng.bytes(int(rng.integers(0, 40)))
+    if r == 4:
+        return "".join(chr(int(c))
+                       for c in rng.integers(32, 1500, int(rng.integers(0, 8))))
+    if r == 5:
+        return bool(rng.integers(0, 2))
+    if r == 6:
+        return tuple(_rand_obj(rng, depth + 1)
+                     for _ in range(int(rng.integers(0, 5))))
+    return [_rand_obj(rng, depth + 1) for _ in range(int(rng.integers(0, 4)))]
+
+
+def test_sizing_memo_matches_plain_walk():
+    rng = np.random.default_rng(42)
+    memo = SizingMemo()
+    objs = [_rand_obj(rng) for _ in range(300)]
+    for obj in objs:
+        assert memo.wire_size(obj) == wire_size(obj)
+    for obj in objs:  # second pass: identity/content hits, same answers
+        assert memo.wire_size(obj) == wire_size(obj)
+
+
+def test_sizing_memo_numeric_aliasing_guard():
+    # 0 == False == 0.0 and 1 == True == 1.0, yet the three frame
+    # differently — the content cache must never cross-contaminate them.
+    memo = SizingMemo()
+    variants = [("x", 0), ("x", False), ("x", 0.0),
+                ("x", 1), ("x", True), ("x", 1.0)]
+    for _ in range(3):
+        for v in variants:
+            assert memo.wire_size(v) == wire_size(v)
+    # fresh-but-equal objects (new ids, same values) must be exact too
+    for v in variants:
+        clone = (v[0], v[1])
+        assert memo.wire_size(clone) == wire_size(v)
+
+
+def test_sizing_memo_mutation_safe():
+    memo = SizingMemo()
+    lst = [1, b"ab"]
+    before = memo.wire_size(lst)
+    lst.append("grown")
+    after = memo.wire_size(lst)
+    assert after == wire_size(lst) != before
+    nested = (7, [1, 2])  # unhashable content: never cached by value
+    first = memo.wire_size(nested)
+    nested[1].append(3)
+    assert memo.wire_size(nested) == wire_size(nested) != first
+
+
+# ------------------------------------------------------ server reply cache
+def test_server_reply_cache_identity_and_invalidation():
+    from repro.core.server import StorageServer
+
+    srv = StorageServer("s0")
+    srv.handle("w", ("ec-put", "obj", 0, (1, "w"), b"frag-a", 8))
+    r1 = srv.handle("c", ("ec-query", "obj", 0, None))
+    r2 = srv.handle("c", ("ec-query", "obj", 0, None))
+    assert r2 is r1  # cache hit returns the SAME reply object (memo-friendly)
+    srv.handle("w", ("ec-put", "obj", 0, (2, "w"), b"frag-b", 8))
+    r3 = srv.handle("c", ("ec-query", "obj", 0, None))
+    assert r3 is not r1
+    assert (2, "w") in dict(r3[1])
+    # a write to one object must not evict another object's cached reply
+    srv.handle("w", ("ec-put", "other", 0, (1, "w"), b"frag-o", 8))
+    o1 = srv.handle("c", ("ec-query", "other", 0, None))
+    srv.handle("w", ("ec-put", "obj", 0, (3, "w"), b"frag-c", 8))
+    assert srv.handle("c", ("ec-query", "other", 0, None)) is o1
+
+
+# -------------------------------------------------------------- harness
+def test_workloadgen_plan_is_deterministic():
+    spec = WorkloadSpec(sessions=50, files=16)
+    p1 = WorkloadGen(spec, seed=3).plan()
+    p2 = WorkloadGen(spec, seed=3).plan()
+    assert p1.keys() == p2.keys()
+    for k in ("fids", "is_read", "arrivals", "thinks"):
+        assert np.array_equal(p1[k], p2[k])
+    assert p1["payloads_seed"] == p2["payloads_seed"]
+
+
+def test_workloadgen_zipf_skew():
+    w = WorkloadGen(WorkloadSpec(files=32, zipf_s=0.99)).zipf_weights()
+    assert len(w) == 32 and abs(w.sum() - 1.0) < 1e-12
+    assert all(w[i] >= w[i + 1] for i in range(31))  # rank-ordered popularity
+    assert w[0] > 5 * w[-1]
+
+
+def test_workloadgen_storm_capped_at_tolerable():
+    dss = DSS(DSSParams(algorithm="coaresecf", n_servers=6, parity_m=2))
+    spec = WorkloadSpec(sessions=4, storms=(CrashStorm(at=0.01, frac=1.0),))
+    gen = WorkloadGen(spec, seed=1)
+    [(storm, crash_ids)] = gen._storm_plan(dss)
+    tolerable = dss.params.n_servers - dss.c0.quorum()
+    assert 0 < len(crash_ids) <= tolerable  # a full-fleet storm is capped

@@ -14,6 +14,12 @@
 #                      FAILS if quorum-round counts regress versus
 #                      benchmarks/smoke_baseline.json (per-metric tolerance)
 #   make lint          ruff check (the CI lint job; pip install ruff)
+#   make analyze       protocol-invariant AST lint pack (stdlib-only:
+#                      registry drift, assert ban, determinism, set
+#                      iteration, _StateMap bypass) — fails on any finding
+#   make sanitize-test tier-1 suite with the runtime protocol sanitizer on
+#                      (REPRO_SANITIZE=1: live quorum/tag/vocabulary checks
+#                      + post-hoc Wing–Gong pass on workload histories)
 #   make dev-deps      install optional dev extras (real hypothesis, ruff)
 #
 # The suite runs WITHOUT hypothesis installed (tests/_propfallback.py).
@@ -22,10 +28,16 @@ PY ?= python
 
 .PHONY: test tier1 repair-tests batch-tests kernel-tests bench-repair \
         bench-readpath bench-multifile bench-gateway bench-scale bench-smoke \
-        lint dev-deps
+        lint analyze sanitize-test dev-deps
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+analyze:
+	PYTHONPATH=src $(PY) -m repro.analysis
+
+sanitize-test:
+	REPRO_SANITIZE=1 PYTHONPATH=src $(PY) -m pytest -x -q
 
 repair-tests:
 	PYTHONPATH=src $(PY) -m pytest -q tests/test_repair.py tests/test_erasure.py tests/test_sim.py

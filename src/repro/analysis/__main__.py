@@ -1,0 +1,7 @@
+"""``python -m repro.analysis`` — run the protocol-invariant lint pack."""
+import sys
+
+from repro.analysis.invariants import main
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

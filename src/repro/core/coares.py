@@ -329,6 +329,13 @@ class CoAresClient:
             decided = yield from self._propose_batch(
                 members, nu, last.config, new_config
             )
+            san = getattr(self.net, "sanitizer", None)
+            if san is not None:
+                # consensus may have decided a rival proposer's config —
+                # register whatever won so the EC-quorum registry stays
+                # complete before traffic hits the new configuration
+                for o in members:
+                    san.register_config(decided[o])
             # 2) announce ⟨decided, P⟩ on a quorum of the last configuration
             yield RPC(
                 dests=last.config.servers,

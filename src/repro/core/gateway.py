@@ -213,6 +213,9 @@ class Gateway:
         if self._stopped:
             return
         self.coverage.setdefault((cfg_idx, config.cfg_id), config)
+        san = getattr(self.net, "sanitizer", None)
+        if san is not None:
+            san.register_config(config)
 
     def register_daemon(self, daemon, sid: str | None = None) -> str:
         """Register a RepairDaemon for config gossip: a
@@ -251,12 +254,15 @@ class Gateway:
                 need="alive",
             )
             self.stats["gossip_rounds"] += 1
+            san = getattr(self.net, "sanitizer", None)
             for _sid, (_tok, applied, known) in replies.items():
                 self.stats["gossip_applied"] += applied
                 for idx, cid, cfg in known:
                     if (idx, cid) not in self.coverage:
                         self.coverage[(idx, cid)] = cfg
                         self.stats["gossip_learned"] += 1
+                        if san is not None:
+                            san.register_config(cfg)
         return dict(self.stats)
 
     def stop(self) -> None:

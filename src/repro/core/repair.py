@@ -128,7 +128,7 @@ def probe_health(config: Config, cfg_idx: int, objs) -> Generator:
             # unreadable from this configuration, margin is negative, and
             # repair cannot rebuild it — never report it healthy.
             best = max(
-                ((counts.get(t, 0), t) for t in seen), default=(0, TAG0)
+                ((counts.get(t, 0), t) for t in sorted(seen)), default=(0, TAG0)
             )
             health = ObjectHealth(
                 obj=obj, tag=best[1], holders=best[0], alive=alive,

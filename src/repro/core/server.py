@@ -113,6 +113,16 @@ class _StateMap(dict):
 
 
 class StorageServer(Server):
+    # Runtime-sanitizer hook (repro.analysis.sanitizer): when set, every
+    # per-object invalidation that fires OUTSIDE ``handle`` — i.e. direct
+    # state surgery by tests/fault injection through the tracked maps — is
+    # reported as ``_mut_observer(sid, obj)`` so the sanitizer can drop its
+    # high-water marks for that (server, object) instead of flagging the
+    # injected loss as a protocol bug. None (the default) costs one
+    # attribute read per handle() call and nothing per mutation.
+    _mut_observer = None
+    _in_handle = False
+
     def __init__(self, sid: str):
         super().__init__(sid)
         # ABD-DAP: (obj, cfg_idx) -> (tag, value)
@@ -135,6 +145,9 @@ class StorageServer(Server):
             cache = self._rcache
             for k in keys:
                 cache.pop(k, None)
+        obs = self._mut_observer
+        if obs is not None and not self._in_handle:
+            obs(self.sid, obj)
 
     # ------------------------------------------------------------------ state
     def _abd_state(self, key: tuple) -> tuple[Tag, Any]:
@@ -162,6 +175,17 @@ class StorageServer(Server):
 
     # ---------------------------------------------------------------- handler
     def handle(self, sender: str, msg: tuple) -> Any:
+        if self._mut_observer is None:
+            return self._handle(sender, msg)
+        # sanitized run: protocol-driven mutations inside the handler must
+        # NOT be reported as external surgery
+        self._in_handle = True
+        try:
+            return self._handle(sender, msg)
+        finally:
+            self._in_handle = False
+
+    def _handle(self, sender: str, msg: tuple) -> Any:
         op = msg[0]
         objs = self._READ_ONLY.get(op)
         if objs is not None:

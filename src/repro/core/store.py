@@ -11,6 +11,7 @@
 from __future__ import annotations
 
 import itertools
+import os
 from dataclasses import dataclass, field as dc_field
 from typing import Generator
 
@@ -57,6 +58,12 @@ class DSSParams:
     # ISSUE 7 — vectorised one-event-per-fan-out network engine (trace-
     # identical to the per-destination legacy path; False = ablation).
     fast_net: bool = True
+    # ISSUE 8 — runtime protocol sanitizer (repro.analysis.sanitizer): live
+    # quorum-intersection + per-server tag-monotonicity + wire-vocabulary
+    # checks on every fan-out/reply. Also enabled by REPRO_SANITIZE=1 in the
+    # environment (how CI runs a sanitized tier-1 pass). Pure observer —
+    # sanitized traces are bit-identical to unsanitized ones.
+    sanitize: bool = False
     latency: LatencyModel = dc_field(default_factory=LatencyModel)
 
 
@@ -262,6 +269,15 @@ class DSS:
         # (e.g. the auto-retargeting RepairDaemon); every CoAresClient this
         # store hands out notifies them via ``_notify_recon``.
         self._recon_subs: list = []
+        if p.sanitize or os.environ.get("REPRO_SANITIZE") == "1":
+            from repro.analysis.sanitizer import ProtocolSanitizer
+
+            san = ProtocolSanitizer().attach(self.net)
+            san.register_config(self.c0)
+            # decided recon targets keep the EC-quorum registry complete
+            self._recon_subs.append(
+                lambda cfg, idx, objs: san.register_config(cfg)
+            )
 
     def _notify_recon(self, config: Config, cfg_idx: int, objs) -> None:
         for sub in list(self._recon_subs):
@@ -331,7 +347,10 @@ class DSS:
             sids = tuple(have[:n])
         m = parity_m if parity_m is not None else p.parity_m
         k = max(1, n - m) if dap in ("ec", "ec_opt") else 1
-        return Config(f"c{next(self._cfg_counter)}", sids, dap=dap, k=k, delta=p.delta)
+        cfg = Config(f"c{next(self._cfg_counter)}", sids, dap=dap, k=k, delta=p.delta)
+        if self.net.sanitizer is not None:
+            self.net.sanitizer.register_config(cfg)
+        return cfg
 
     # --- crash injection ---------------------------------------------------------
     def crash_servers(self, ids: list[str]) -> None:
@@ -427,3 +446,15 @@ class DSS:
 
     def run(self, **kw) -> None:
         self.net.run(**kw)
+
+    # --- post-hoc history checking (ISSUE 8) -------------------------------------
+    def check_history(self, *, strict_reads: bool = True) -> dict:
+        """Wing–Gong tag-order linearizability over this store's recorded
+        history (see ``repro.analysis.linearize``); raises
+        ``LinearizabilityError`` on a violation, returns counters otherwise.
+        ``strict_reads=False`` relaxes only the reads-from condition — use it
+        for histories taken under crash storms, where a read may observe a
+        write that failed before recording itself."""
+        from repro.analysis.linearize import check_tag_linearizable
+
+        return check_tag_linearizable(self.history, strict_reads=strict_reads)

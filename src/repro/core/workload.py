@@ -194,6 +194,21 @@ class WorkloadGen:
             "bytes_sent": net.bytes_sent,
             "events": net.events_processed,
         }
+        if getattr(net, "sanitizer", None) is not None:
+            # sanitized run (ISSUE 8): every fan-out/reply was checked live;
+            # close with the post-hoc Wing–Gong pass over the recorded
+            # history. Reads-from is only provable when every op recorded
+            # itself — crash storms leave failed/stuck writers whose tags
+            # reads may legitimately observe.
+            from repro.analysis.linearize import check_tag_linearizable
+
+            strict = ops_failed == 0 and ops - ops_done == 0
+            lin = check_tag_linearizable(dss.history, strict_reads=strict)
+            report["sanitizer"] = dict(net.sanitizer.report(), **{
+                "linearized_objects": lin["objects"],
+                "linearized_ops": lin["ops"],
+                "strict_reads": strict,
+            })
         if spec.collect_latencies:
             lats = [
                 f.stats.latency

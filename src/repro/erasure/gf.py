@@ -82,7 +82,10 @@ def gf_matmul_np(A: np.ndarray, B: np.ndarray) -> np.ndarray:
     """
     A = np.asarray(A, dtype=np.uint8)
     B = np.asarray(B, dtype=np.uint8)
-    assert A.ndim == 2 and B.ndim == 2 and A.shape[1] == B.shape[0]
+    if A.ndim != 2 or B.ndim != 2 or A.shape[1] != B.shape[0]:
+        raise ValueError(
+            f"gf_matmul_np needs (m,k)@(k,n) matrices, got {A.shape}@{B.shape}"
+        )
     # (m, k, j) products, XOR-folded over k.
     terms = gf_mul_np(A[:, :, None], B[None, :, :])
     return np.bitwise_xor.reduce(terms, axis=1)
@@ -143,7 +146,8 @@ def bits_to_bytes_np(Pbits: np.ndarray) -> np.ndarray:
     """(8m, L) 0/1 -> (m, L) uint8 (little-endian pack)."""
     Pbits = np.asarray(Pbits, dtype=np.uint8)
     m8, L = Pbits.shape
-    assert m8 % 8 == 0
+    if m8 % 8 != 0:
+        raise ValueError(f"bit-plane row count {m8} is not a multiple of 8")
     b = Pbits.reshape(m8 // 8, 8, L)
     weights = (1 << np.arange(8, dtype=np.uint16))[None, :, None]
     return (b.astype(np.uint16) * weights).sum(axis=1).astype(np.uint8)

@@ -47,7 +47,8 @@ def vandermonde_matrix(n: int, k: int) -> np.ndarray:
             acc = gf_mul(acc, i)
     top_inv = gf_invert_matrix(V[:k])
     Vs = gf_matmul_np(V, top_inv)
-    assert np.array_equal(Vs[:k], np.eye(k, dtype=np.uint8)), "systematization failed"
+    if not np.array_equal(Vs[:k], np.eye(k, dtype=np.uint8)):
+        raise RuntimeError("Vandermonde systematization failed")
     return Vs[k:]
 
 
@@ -55,7 +56,8 @@ def gf_invert_matrix(A: np.ndarray) -> np.ndarray:
     """Invert a square GF(256) matrix by Gauss-Jordan elimination (uint8)."""
     A = np.asarray(A, dtype=np.uint8).copy()
     k = A.shape[0]
-    assert A.shape == (k, k)
+    if A.shape != (k, k):
+        raise ValueError(f"square matrix required, got shape {A.shape}")
     aug = np.concatenate([A, np.eye(k, dtype=np.uint8)], axis=1)
     for col in range(k):
         # pivot

@@ -46,6 +46,40 @@ class CodecError(ValueError):
     """Object is outside the wire vocabulary (caller should fall back)."""
 
 
+# --------------------------------------------------------- message registry
+# The protocol's message vocabulary, declared next to the wire format it
+# rides on. ``repro.analysis``'s registry-drift lint parses these literals
+# and cross-checks them against ``core/server.py``'s ``_DISPATCH`` table and
+# handler reply tags (and the gateway's gossip vocabulary) in BOTH
+# directions, so adding a handler without auditing its framing — or
+# retiring one and leaving a stale registry entry — fails ``make analyze``.
+# The runtime sanitizer uses the same sets to flag unknown tags on live
+# traffic, and ``tests/test_codec.py`` round-trips one exemplar per entry.
+
+#: request tags the storage servers dispatch (``StorageServer._DISPATCH``)
+MESSAGE_TYPES: frozenset = frozenset({
+    "ec-query-batch", "ec-put-batch", "abd-get-batch", "abd-put-batch",
+    "read-next-batch", "write-next-batch", "cons-p1-batch", "cons-p2-batch",
+    "margin-batch",
+    "abd-get", "abd-get-tag", "abd-put",
+    "ec-query", "ec-put", "ec-repair-pull", "ec-repair-push",
+    "read-next", "write-next", "cons-p1", "cons-p2",
+})
+
+#: reply tags the storage-server handlers return
+REPLY_TYPES: frozenset = frozenset({
+    "ec-list-batch", "abd-val-batch", "next-c-batch", "p1-batch", "p2-batch",
+    "margin-batch",
+    "abd-val", "abd-tag", "ec-list", "ec-repair-list",
+    "next-c", "ack", "repair-ack",
+    "p1-ok", "p1-nack", "p2-ok", "p2-nack",
+})
+
+#: gateway anti-entropy vocabulary (``GossipListener.handle``)
+GOSSIP_TYPES: frozenset = frozenset({"gossip-configs"})
+GOSSIP_REPLY_TYPES: frozenset = frozenset({"gossip-ack"})
+
+
 _CONFIG_CLS = None
 
 

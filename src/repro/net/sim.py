@@ -57,7 +57,7 @@ import itertools
 import math
 from dataclasses import dataclass
 from functools import partial
-from time import perf_counter
+from time import perf_counter  # protocol-lint: allow-determinism (profile_protocol wall split only; virtual time never reads it)
 from typing import Any, Callable, Generator
 
 import numpy as np
@@ -336,6 +336,8 @@ class _FanOut:
         if reply is None:
             state.abandon(sid)
             return
+        if net.sanitizer is not None:
+            net.sanitizer.on_reply(sid, msg, reply)
         rsize = net._wire(reply)
         net.msg_count += 1
         net.bytes_sent += rsize
@@ -423,11 +425,19 @@ class Network:
         # event are noise the normal path shouldn't pay.
         self.profile_protocol = False
         self.protocol_time = 0.0
+        # optional runtime invariant observer (repro.analysis.sanitizer),
+        # attached via ProtocolSanitizer.attach() behind DSSParams.sanitize /
+        # REPRO_SANITIZE=1. Pure observer: it draws no randomness and
+        # schedules nothing, so sanitized traces stay bit-identical. Cost
+        # when unset is one ``is not None`` per fan-out/reply.
+        self.sanitizer = None
 
     # -- topology ------------------------------------------------------------
     def add_server(self, server: Server) -> None:
         self.servers[server.sid] = server
         self._dest_cache.clear()  # cached fan-outs may now resolve more dests
+        if self.sanitizer is not None and hasattr(server, "_mut_observer"):
+            server._mut_observer = self.sanitizer.forget
 
     def crash(self, sid: str) -> None:
         self.servers[sid].crashed = True
@@ -718,6 +728,9 @@ class Network:
             need = rpc.need
             counted = frozenset()
         need = min(need, len(rpc.dests))
+        san = self.sanitizer
+        if san is not None:
+            san.on_rpc(rpc, None if alive_mode else need)
         state = _RpcState(
             self, gen, fut, on_done, acct, self._intern(fut.client),
             need, alive_mode, counted,
@@ -945,6 +958,8 @@ class Network:
                 if reply is None:
                     state.abandon(sid)
                     return
+                if self.sanitizer is not None:
+                    self.sanitizer.on_reply(sid, msg, reply)
                 rsize = msg_wire_size(reply)
                 self.msg_count += 1
                 self.bytes_sent += rsize

@@ -1,0 +1,396 @@
+"""Protocol invariant analyzer (ISSUE 8): lint pack + runtime sanitizer.
+
+Three layers:
+
+* the AST lint engine and each rule of the pack, exercised on synthetic
+  sources (and a fake mini-repo for the cross-file registry-drift rule);
+* the gate itself: ``collect_findings()`` over THIS repo must be empty —
+  the same check ``make analyze`` runs in CI;
+* the runtime sanitizer: clean over a mixed zipfian + crash-storm workload
+  (with the trace bit-identical to an unsanitized run), and loudly failing
+  on deliberately seeded violations — a quorum off-by-one and a
+  tracked-map-bypassing tag regression — while forgiving the tracked-map
+  fault injection the tier-1 suites perform on purpose.
+"""
+import textwrap
+
+import pytest
+
+from repro.analysis.astlint import Finding, run_rules, waived
+from repro.analysis.invariants import (
+    MODULE_RULES,
+    REPO_RULES,
+    AssertBanRule,
+    DeterminismRule,
+    RegistryDriftRule,
+    SetIterationRule,
+    StateMapBypassRule,
+    collect_findings,
+)
+from repro.analysis.linearize import LinearizabilityError, check_tag_linearizable
+from repro.analysis.sanitizer import ProtocolSanitizer, SanitizerError
+from repro.core.store import DSS, DSSParams
+from repro.core.tags import TAG0, Config, OpRecord
+from repro.core.workload import CrashStorm, WorkloadGen, WorkloadSpec
+
+
+# --------------------------------------------------------------- lint engine
+def _lint(tmp_path, relpath, source, rules):
+    # fresh root per call: run_rules walks the whole tree
+    root = tmp_path / f"r{len(list(tmp_path.iterdir()))}"
+    p = root / relpath
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    return run_rules(root, rules)
+
+
+def test_assert_ban_flags_and_scopes(tmp_path):
+    src = "def f(x):\n    assert x > 0\n    return x\n"
+    found = _lint(tmp_path, "core/mod.py", src, [AssertBanRule()])
+    assert [(f.rule, f.line) for f in found] == [("assert-ban", 2)]
+    # out of scope: same source under tools/ is not protocol code
+    assert _lint(tmp_path, "tools/mod.py", src, [AssertBanRule()]) == []
+
+
+def test_waiver_is_per_line_and_per_rule(tmp_path):
+    src = (
+        "def f(x):\n"
+        "    assert x  # protocol-lint: allow-assert-ban (test scaffold)\n"
+        "    assert x\n"
+    )
+    found = _lint(tmp_path, "core/mod.py", src, [AssertBanRule()])
+    assert [f.line for f in found] == [3]  # line 2 waived, line 3 not
+    assert waived(["x  # protocol-lint: allow-r1"], 1, "r1")
+    assert not waived(["x  # protocol-lint: allow-r1"], 1, "r2")
+
+
+def test_determinism_rule(tmp_path):
+    src = """
+        import time
+        from random import random
+        import numpy as np
+
+        def f(rng):
+            a = np.random.random()          # legacy global: flagged
+            b = np.random.default_rng(0)    # seeded Generator: allowed
+            return a, b, rng.uniform()
+    """
+    found = _lint(tmp_path, "net/mod.py", src, [DeterminismRule()])
+    msgs = [f.message for f in found]
+    assert len(found) == 3
+    assert any("'time'" in m for m in msgs)
+    assert any("'random'" in m for m in msgs)
+    assert any("np.random.random" in m for m in msgs)
+
+
+def test_set_iteration_rule(tmp_path):
+    src = """
+        def f(items, net):
+            s = {x for x in items}
+            for x in s:                     # flagged: tracked set name
+                pass
+            out = [y for y in set(items)]   # flagged: set() in generator
+            t = tuple({1, 2})               # flagged: tuple() over a set
+            net.rpc(dests=s)                # flagged: dests= from a set
+            for x in sorted(s):             # sanctioned idiom
+                pass
+            ok = 1 in s                     # membership: fine
+            return out, t, ok
+    """
+    found = _lint(tmp_path, "core/mod.py", src, [SetIterationRule()])
+    assert len(found) == 4
+    # a name REASSIGNED to a non-set is not tracked (no false positive)
+    src2 = "def g(a):\n    s = {1}\n    s = sorted(s)\n    return [x for x in s]\n"
+    assert _lint(tmp_path, "core/mod2.py", src2, [SetIterationRule()]) == []
+
+
+def test_statemap_bypass_rule(tmp_path):
+    src = """
+        class StorageServer:
+            def __init__(self):
+                self.ec = {}                # allowed nowhere but server.py
+
+            def reset(self):
+                self.ec = {}                # flagged: rebinding tracked map
+                self.abd = dict()           # flagged
+                self.ec[("o", 0)] = {}      # in-place write: fine
+    """
+    # under the real path the __init__ exemption applies
+    found = _lint(tmp_path, "core/server.py", src, [StateMapBypassRule()])
+    assert [f.line for f in found] == [7, 8]
+    # in any OTHER module even __init__ may not rebind server maps
+    found2 = _lint(tmp_path, "core/other.py", src, [StateMapBypassRule()])
+    assert [f.line for f in found2] == [4, 7, 8]
+
+
+# ------------------------------------------------------- registry drift rule
+_MINI_SERVER = """
+class StorageServer:
+    _READ_ONLY = {"get": lambda m: (m[1],)}
+    _DISPATCH = {"get": None, "put": None}
+
+    def _h_get(self, sender, msg):
+        return ("val", 1)
+
+    def _h_put(self, sender, msg):
+        return ("ack",)
+"""
+_MINI_GATEWAY = """
+class GossipListener:
+    def handle(self, sender, msg):
+        op = msg[0]
+        if op == "gossip-configs":
+            return ("gossip-ack", 0)
+        raise ValueError(op)
+"""
+
+
+def _mini_repo(tmp_path, codec_src):
+    (tmp_path / "core").mkdir()
+    (tmp_path / "net").mkdir()
+    (tmp_path / "core" / "server.py").write_text(_MINI_SERVER)
+    (tmp_path / "core" / "gateway.py").write_text(_MINI_GATEWAY)
+    (tmp_path / "net" / "codec.py").write_text(textwrap.dedent(codec_src))
+    return list(RegistryDriftRule().check_repo(tmp_path))
+
+
+def test_registry_drift_clean(tmp_path):
+    assert _mini_repo(tmp_path, """
+        MESSAGE_TYPES = frozenset({"get", "put"})
+        REPLY_TYPES = frozenset({"val", "ack"})
+        GOSSIP_TYPES = frozenset({"gossip-configs"})
+        GOSSIP_REPLY_TYPES = frozenset({"gossip-ack"})
+    """) == []
+
+
+def test_registry_drift_both_directions(tmp_path):
+    found = _mini_repo(tmp_path, """
+        MESSAGE_TYPES = frozenset({"get", "stale-op"})
+        REPLY_TYPES = frozenset({"val", "ack", "ghost"})
+        GOSSIP_TYPES = frozenset()
+        GOSSIP_REPLY_TYPES = frozenset({"gossip-ack"})
+    """)
+    msgs = "\n".join(f.message for f in found)
+    assert "server handles 'put'" in msgs          # handler w/o registry
+    assert "'stale-op'" in msgs                    # registry w/o handler
+    assert "'ghost'" in msgs                       # reply registry w/o tag
+    assert "'gossip-configs'" in msgs              # gossip asymmetry
+
+
+def test_registry_drift_missing_registry(tmp_path):
+    found = _mini_repo(tmp_path, "MESSAGE_TYPES = frozenset({'get', 'put'})\n")
+    assert any("REPLY_TYPES missing" in f.message for f in found)
+
+
+def test_finding_str_format():
+    f = Finding("r", "core/x.py", 7, "boom")
+    assert str(f) == "core/x.py:7: [r] boom"
+
+
+# --------------------------------------------------------------- the CI gate
+def test_repo_is_lint_clean():
+    """The gate itself: the rule pack over this repo's ``src/repro`` must be
+    empty — identical to what ``make analyze`` enforces in CI."""
+    findings = collect_findings()
+    assert findings == [], "\n".join(str(f) for f in findings)
+    assert len(MODULE_RULES) == 4 and len(REPO_RULES) == 1
+
+
+# ---------------------------------------------------------- linearize (unit)
+def _rec(kind, obj, client, start, end, tag, flag="chg"):
+    return OpRecord(kind=kind, obj=obj, client=client, start=start, end=end,
+                    tag=tag, flag=flag)
+
+
+def test_linearize_accepts_legal_history():
+    h = [
+        _rec("write", "o", "w1", 0.0, 1.0, (1, "w1")),
+        _rec("read", "o", "r1", 1.5, 2.0, (1, "w1")),
+        _rec("write", "o", "w2", 1.8, 2.5, (2, "w2")),
+        _rec("read", "o", "r2", 3.0, 3.5, (2, "w2")),
+        _rec("recon", "o", "c", 0.0, 4.0, (2, "w2")),  # non-register: skipped
+    ]
+    assert check_tag_linearizable(h) == {"objects": 1, "ops": 4}
+
+
+def test_linearize_rejects_stale_read():
+    h = [
+        _rec("write", "o", "w1", 0.0, 1.0, (1, "w1")),
+        _rec("write", "o", "w2", 1.5, 2.0, (2, "w2")),
+        _rec("read", "o", "r1", 2.5, 3.0, (1, "w1")),  # after w2 completed
+    ]
+    with pytest.raises(LinearizabilityError, match="real-time order"):
+        check_tag_linearizable(h)
+
+
+def test_linearize_rejects_duplicate_write_tags():
+    h = [
+        _rec("write", "o", "w1", 0.0, 1.0, (1, "x")),
+        _rec("write", "o", "w2", 2.0, 3.0, (1, "x")),
+    ]
+    with pytest.raises(LinearizabilityError, match="duplicate"):
+        check_tag_linearizable(h)
+
+
+def test_linearize_reads_from_strictness():
+    h = [
+        _rec("write", "o", "w1", 0.0, 1.0, (1, "w1")),
+        _rec("read", "o", "r1", 1.5, 2.0, (2, "crashed")),  # unrecorded write
+    ]
+    with pytest.raises(LinearizabilityError, match="no recorded write"):
+        check_tag_linearizable(h, strict_reads=True)
+    # under crash storms the producer may have died before recording itself
+    assert check_tag_linearizable(h, strict_reads=False)["ops"] == 2
+
+
+def test_linearize_concurrent_ops_any_order():
+    # reads overlapping each other AND an in-flight write may resolve in
+    # either tag order (linearization: w1, r2, w2, r1)
+    h = [
+        _rec("write", "o", "w1", 0.0, 1.0, (1, "w1")),
+        _rec("write", "o", "w2", 0.5, 3.0, (2, "w2")),  # still in flight
+        _rec("read", "o", "r1", 1.6, 2.6, (2, "w2")),
+        _rec("read", "o", "r2", 1.7, 2.5, (1, "w1")),  # overlaps r1: legal
+    ]
+    assert check_tag_linearizable(h)["ops"] == 4
+
+
+# ------------------------------------------------------------ sanitizer: unit
+def test_sanitizer_quorum_intersection_unit():
+    class _Rpc:
+        def __init__(self, dests, msg):
+            self.dests, self.msg, self.per_dest = dests, msg, None
+
+    san = ProtocolSanitizer()
+    five = tuple(f"s{i}" for i in range(5))
+    san.on_rpc(_Rpc(five, ("abd-get", "o", 0, None)), 3)   # majority: ok
+    with pytest.raises(SanitizerError, match="majority"):
+        san.on_rpc(_Rpc(five, ("abd-get", "o", 0, None)), 2)
+    # EC quorum ceil((n+k)/2): n=5, k=3 -> 4; majority alone is too weak
+    san.register_config(Config("c1", five, dap="ec_opt", k=3, delta=8))
+    with pytest.raises(SanitizerError, match=r"ceil"):
+        san.on_rpc(_Rpc(five, ("ec-query", "o", 0, None)), 3)
+    san.on_rpc(_Rpc(five, ("ec-query", "o", 0, None)), 4)  # ok
+    # alive-addressed fan-outs are not quorum rounds
+    san.on_rpc(_Rpc(five, ("margin-batch", ("o",), 0)), None)
+    with pytest.raises(SanitizerError, match="unknown message"):
+        san.on_rpc(_Rpc(five, ("not-a-real-op", 1)), 3)
+
+
+def test_sanitizer_tag_monotonicity_unit():
+    san = ProtocolSanitizer()
+    t1, t2 = (1, "w"), (2, "w")
+    san.on_reply("s0", ("abd-get", "o", 0, None), ("abd-val", t2, b"v"))
+    with pytest.raises(SanitizerError, match="monotonicity"):
+        san.on_reply("s0", ("abd-get", "o", 0, None), ("abd-val", t1, b"v"))
+    # forget (external fault injection) resets the floor
+    san.forget("s0", "o")
+    san.on_reply("s0", ("abd-get", "o", 0, None), ("abd-val", t1, b"v"))
+    assert san.forgets == 1
+    with pytest.raises(SanitizerError, match="unknown reply"):
+        san.on_reply("s0", ("abd-get", "o", 0, None), ("not-a-reply", 1))
+
+
+def test_sanitizer_finalized_next_config_is_sticky():
+    san = ProtocolSanitizer()
+    cfg1 = Config("c1", ("s0",), dap="abd", k=1, delta=8)
+    cfg2 = Config("c2", ("s0",), dap="abd", k=1, delta=8)
+    san.on_reply("s0", ("read-next", "o", 0), ("next-c", (cfg1, "F")))
+    with pytest.raises(SanitizerError, match="regressed"):
+        san.on_reply("s0", ("read-next", "o", 0), ("next-c", (cfg2, "P")))
+    with pytest.raises(SanitizerError, match="uniqueness"):
+        san.on_reply("s0", ("write-next", "o", 0, cfg2, "F"), ("ack",))
+
+
+# ------------------------------------------------- sanitizer: live (seeded)
+def test_sanitized_workload_clean_and_trace_identical():
+    """Mixed zipfian reads/writes + a crash storm, EC fragmented: sanitizer
+    stays silent, the post-run Wing–Gong pass holds, and the virtual-time
+    trace is bit-identical to the unsanitized run (pure-observer contract)."""
+    spec = WorkloadSpec(sessions=120, files=12, file_size=512,
+                        read_fraction=0.8,
+                        storms=(CrashStorm(at=0.05, frac=0.25, duration=0.03),))
+    rep = WorkloadGen(spec, seed=7).run(
+        DSS(DSSParams(algorithm="coaresecf", sanitize=True, seed=7))
+    )
+    base = WorkloadGen(spec, seed=7).run(
+        DSS(DSSParams(algorithm="coaresecf", seed=7))
+    )
+    assert rep["sanitizer"]["checks"] > 1000
+    assert rep["sanitizer"]["linearized_ops"] > 0
+    for key in ("rpc_rounds", "msg_count", "bytes_sent", "events",
+                "virtual_makespan", "ops_done", "ops_failed"):
+        assert rep[key] == base[key], key
+
+
+def test_sanitizer_catches_seeded_quorum_off_by_one(monkeypatch):
+    """The acceptance scenario: shrink ``Config.quorum`` below majority and
+    the very first EC fan-out must die with SanitizerError."""
+    monkeypatch.setattr(Config, "quorum", lambda self: len(self.servers) // 2)
+    dss = DSS(DSSParams(algorithm="coaresecf", sanitize=True))
+    sess = dss.session("c1")
+    sess.write("f", b"x" * 256)
+    with pytest.raises(SanitizerError, match="majority|quorum"):
+        dss.run()
+
+
+def test_sanitizer_catches_bypassing_tag_regression():
+    """A buggy server losing its register WITHOUT the tracked-map
+    invalidation (dict.__setitem__ bypass — exactly what statemap-bypass
+    lints against) is caught on the next recomputed reply."""
+    dss = DSS(DSSParams(algorithm="coaresabd", sanitize=True))
+    sess = dss.session("c1")
+    sess.write("f", b"v1")
+    dss.run()
+    sess.read("f")
+    dss.run()  # sanitizer has proven every server's tag
+    srv = dss.net.servers["s0"]
+    dict.__setitem__(srv.abd, ("f", 0), (TAG0, None))
+    dict.clear(srv._rcache)  # buggy server recomputes instead of caching
+    dict.clear(srv._rkeys)
+    sess.read("f")
+    with pytest.raises(SanitizerError, match="monotonicity"):
+        dss.run()
+
+
+def test_sanitizer_forgives_tracked_fault_injection():
+    """The SAME state surgery through the tracked maps (what the tier-1
+    suites do: ``del lst[tag]``, ``wipe_servers``) fires the
+    external-mutation observer and is NOT a violation."""
+    dss = DSS(DSSParams(algorithm="coaresabd", sanitize=True))
+    sess = dss.session("c1")
+    sess.write("f", b"v1")
+    dss.run()
+    sess.read("f")
+    dss.run()
+    srv = dss.net.servers["s0"]
+    srv.abd[("f", 0)] = (TAG0, None)  # tracked: invalidates + forgets
+    sess.read("f")
+    dss.run()
+    assert dss.net.sanitizer.forgets >= 1
+    rep = dss.net.sanitizer.report()
+    assert rep["checks"] > 0 and rep["known_server_sets"] == 0  # abd-only
+
+
+def test_sanitized_recon_and_gateway_paths():
+    """Reconfiguration (ABD -> EC, fresh servers) and the gateway gossip
+    tier under the sanitizer: new configs are registered with the EC-quorum
+    registry and the run stays clean end to end."""
+    dss = DSS(DSSParams(algorithm="coaresecf", n_servers=5, parity_m=1,
+                        sanitize=True))
+    gw = dss.gateway("gw")
+    s1, s2 = gw.session("c1"), gw.session("c2")
+    s1.write("f", b"a" * 512)
+    s2.write("g", b"b" * 512)
+    dss.run()
+    target = dss.make_config(n_servers=5, parity_m=2, fresh_servers=True)
+    s1.recon("f", target)
+    dss.run()
+    s2.read("f")
+    s1.read("g")
+    dss.run()
+    gw.stop()
+    dss.run()
+    san = dss.net.sanitizer
+    assert san.known_k[frozenset(target.servers)] == target.k
+    assert dss.check_history()["ops"] >= 4

@@ -177,3 +177,65 @@ def test_object_dtype_ndarray_stays_outside_the_vocabulary():
     arr = np.array([b"x", ("nested",)], dtype=object)
     assert codec.try_wire_size(arr) is None
     assert nbytes(arr) == 16 + int(arr.nbytes)
+
+
+# --------------------------------------- registry coverage (ISSUE 8, sat. c)
+def test_every_server_message_type_round_trips():
+    """Auto-enumerated registry coverage: ONE exemplar per op the storage
+    server dispatches, asserted to cover ``StorageServer._DISPATCH`` and
+    ``codec.MESSAGE_TYPES`` exactly — adding a handler without extending
+    this table (or the registry) fails here, adding a registry entry
+    without a handler fails too. Every exemplar AND the live reply the
+    server produces for it must round-trip through the wire codec, and the
+    replies must cover ``codec.REPLY_TYPES`` exactly."""
+    from repro.core.server import StorageServer
+
+    tag, tag2 = (3, "w0"), (4, "w1")
+    elem = (b"\x07" * 24, 99)
+    ballot_hi, ballot_lo = (5, "z"), (1, "a")
+    EXEMPLARS = {
+        "ec-query-batch": ("ec-query-batch", (("a", tag), ("b", None)), 0),
+        "ec-put-batch": ("ec-put-batch", (("a", tag, elem),), 0, 8),
+        "abd-get-batch": ("abd-get-batch", (("a", tag), ("b", None)), 0),
+        "abd-put-batch": ("abd-put-batch", (("a", tag, b"v"),), 0),
+        "read-next-batch": ("read-next-batch", (("a", 0), ("b", 1))),
+        "write-next-batch": ("write-next-batch", (("a", 0, CFG, "P"),)),
+        "cons-p1-batch": ("cons-p1-batch", ("a", "b"), 0, ballot_hi),
+        "cons-p2-batch": ("cons-p2-batch", (("a", CFG),), 0, ballot_hi),
+        "margin-batch": ("margin-batch", ("a", "b"), 0),
+        "abd-get": ("abd-get", "a", 0, None),
+        "abd-get-tag": ("abd-get-tag", "a", 0),
+        "abd-put": ("abd-put", "a", 0, tag2, b"v2"),
+        "ec-query": ("ec-query", "a", 0, None),
+        "ec-put": ("ec-put", "a", 0, tag2, elem, 8),
+        "ec-repair-pull": ("ec-repair-pull", "a", 0),
+        "ec-repair-push": ("ec-repair-push", "a", 0, (5, "w2"), elem, 8),
+        "read-next": ("read-next", "a", 0),
+        "write-next": ("write-next", "a", 0, CFG, "F"),
+        "cons-p1": ("cons-p1", "a", 1, ballot_hi),
+        "cons-p2": ("cons-p2", "a", 1, ballot_hi, CFG),
+    }
+    assert set(EXEMPLARS) == set(StorageServer._DISPATCH) == codec.MESSAGE_TYPES
+    assert set(StorageServer._READ_ONLY) <= set(StorageServer._DISPATCH)
+    # extra probes eliciting the nack replies (lower ballot after higher)
+    script = [EXEMPLARS[op] for op in sorted(EXEMPLARS)] + [
+        ("cons-p1", "a", 1, ballot_lo),
+        ("cons-p2", "a", 1, ballot_lo, CFG),
+    ]
+    srv = StorageServer("s0")
+    seen = set()
+    for msg in script:
+        _rt(msg)
+        reply = srv.handle("c", msg)
+        assert isinstance(reply, tuple) and reply[0] in codec.REPLY_TYPES, msg
+        seen.add(reply[0])
+        _rt(reply)
+    assert seen == codec.REPLY_TYPES
+
+
+def test_gossip_registry_round_trips():
+    """The gateway tier's anti-entropy pair, pinned to its registry."""
+    assert codec.GOSSIP_TYPES == {"gossip-configs"}
+    assert codec.GOSSIP_REPLY_TYPES == {"gossip-ack"}
+    _rt(("gossip-configs", ((0, "c0", CFG), (1, "c1", CFG))))
+    _rt(("gossip-ack", 2, ((0, "c0", CFG),)))

@@ -20,6 +20,17 @@
 #   make sanitize-test tier-1 suite with the runtime protocol sanitizer on
 #                      (REPRO_SANITIZE=1: live quorum/tag/vocabulary checks
 #                      + post-hoc Wing–Gong pass on workload histories)
+#   make explore       schedule explorer (ISSUE 9): selftest (three seeded
+#                      bugs must be found and replay byte-identically),
+#                      then bounded-exhaustive DFS with crash+drop
+#                      injection and a seeded PCT sweep on the EC-recon
+#                      scenario — all must come back clean on HEAD.
+#                      Violations serialize to runs/schedules/*.json
+#   make replay SCHEDULE=runs/schedules/<bundle>.json
+#                      re-execute a repro bundle; fails unless the
+#                      violation AND trace fingerprint reproduce exactly
+#   make typecheck     mypy --strict over src/repro/analysis (mypy.ini;
+#                      the CI lint job pip-installs mypy like ruff)
 #   make dev-deps      install optional dev extras (real hypothesis, ruff)
 #
 # The suite runs WITHOUT hypothesis installed (tests/_propfallback.py).
@@ -28,7 +39,7 @@ PY ?= python
 
 .PHONY: test tier1 repair-tests batch-tests kernel-tests bench-repair \
         bench-readpath bench-multifile bench-gateway bench-scale bench-smoke \
-        lint analyze sanitize-test dev-deps
+        lint analyze sanitize-test explore replay typecheck dev-deps
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -38,6 +49,19 @@ analyze:
 
 sanitize-test:
 	REPRO_SANITIZE=1 PYTHONPATH=src $(PY) -m pytest -x -q
+
+explore:
+	PYTHONPATH=src $(PY) -m repro.analysis.explore --selftest --budget 2000
+	PYTHONPATH=src $(PY) -m repro.analysis.explore --scenario wr --mode dfs \
+		--budget 4000 --depth 6 --crash-budget 1 --drop-budget 1
+	PYTHONPATH=src $(PY) -m repro.analysis.explore --scenario ec-recon \
+		--mode pct --budget 300 --crash-budget 1 --drop-budget 1
+
+replay:
+	PYTHONPATH=src $(PY) -m repro.analysis.explore --replay $(SCHEDULE)
+
+typecheck:
+	$(PY) -m mypy
 
 repair-tests:
 	PYTHONPATH=src $(PY) -m pytest -q tests/test_repair.py tests/test_erasure.py tests/test_sim.py

@@ -24,11 +24,23 @@ statements, the statement's first line) carries the comment marker
     from time import perf_counter  # protocol-lint: allow-wallclock (profiling)
 
 Waivers are per-line and per-rule, so a blanket opt-out is impossible.
+
+Stale waivers (ISSUE 9): a waiver that stops suppressing anything — the
+code it excused was fixed or moved, but the comment stayed — is itself a
+finding (rule ``stale-waiver``). ``run_rules`` collects every waiver
+comment (via ``tokenize``, so a docstring *mentioning* a marker, like the
+example above, doesn't count) and reports each one no module-rule finding
+consumed. A stale waiver is latent rot: it silently re-opens the line to
+the exact regression the rule guards against. Stale-waiver findings are
+not themselves waivable — delete the comment instead.
 """
 from __future__ import annotations
 
 import ast
+import io
+import re
 import sys
+import tokenize
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Iterable, Iterator
@@ -91,30 +103,68 @@ def waived(lines: list[str], lineno: int, rule: str) -> bool:
     return False
 
 
+STALE_WAIVER_RULE = "stale-waiver"
+
+_WAIVER_RE = re.compile(r"protocol-lint:\s*allow-([A-Za-z0-9_-]+)")
+
+
+def iter_waivers(lines: list[str]) -> Iterator[tuple[int, str]]:
+    """``(lineno, rule)`` for every waiver marker in a COMMENT token.
+    Tokenizing (rather than substring-scanning every line) keeps docstrings
+    and string literals that merely *mention* a marker from counting as
+    waivers of anything."""
+    src = "\n".join(lines) + "\n"
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(src).readline):
+            if tok.type == tokenize.COMMENT:
+                for m in _WAIVER_RE.finditer(tok.string):
+                    yield tok.start[0], m.group(1)
+    except tokenize.TokenError:  # pragma: no cover - file already parsed
+        return
+
+
 def run_rules(
     root: Path,
     module_rules: Iterable[ModuleRule],
     repo_rules: Iterable[RepoRule] = (),
+    check_waivers: bool = True,
 ) -> list[Finding]:
     """Run every rule over the package rooted at ``root``; returns findings
-    (waived ones already removed), sorted by path/line."""
+    (waived ones already removed), sorted by path/line. With
+    ``check_waivers`` (the default), every waiver comment that suppressed
+    no finding is reported under the ``stale-waiver`` rule — including
+    waivers naming unknown rules and waivers in files outside every rule's
+    scope, where nothing could ever fire."""
     findings: list[Finding] = []
     module_rules = list(module_rules)
-    parsed: dict[Path, tuple[ast.Module, list[str]]] = {}
+    used: set[tuple[str, int, str]] = set()
+    waivers: list[tuple[str, int, str]] = []
     for path in iter_py_files(root):
         relpath = path.relative_to(root).as_posix()
         active = [r for r in module_rules if r.applies(relpath)]
-        if not active:
+        if not active and not check_waivers:
             continue
-        if path not in parsed:
-            parsed[path] = parse_module(path)
-        tree, lines = parsed[path]
+        tree, lines = parse_module(path)
+        if check_waivers:
+            for lineno, rname in iter_waivers(lines):
+                waivers.append((relpath, lineno, rname))
         for rule in active:
             for f in rule.check(relpath, tree, lines):
-                if not waived(lines, f.line, f.rule):
+                if waived(lines, f.line, f.rule):
+                    used.add((f.path, f.line, f.rule))
+                else:
                     findings.append(f)
     for rule in repo_rules:
         findings.extend(rule.check_repo(root))
+    for relpath, lineno, rname in waivers:
+        if (relpath, lineno, rname) not in used:
+            findings.append(Finding(
+                STALE_WAIVER_RULE, relpath, lineno,
+                f"waiver 'allow-{rname}' suppresses nothing here: rule "
+                f"{rname!r} does not fire on this line — remove the "
+                "comment (a stale waiver silently re-opens the line to "
+                "the regression the rule guards against)",
+            ))
     return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
 
 

@@ -38,6 +38,12 @@ Five rules, each guarding an invariant one of the protocol tiers rests on:
     invalidation (and the runtime sanitizer's external-mutation hook) —
     the exact cache-coherence race the tracked maps exist to prevent.
 
+The engine additionally self-checks the waiver mechanism (``stale-waiver``,
+ISSUE 9): every ``protocol-lint: allow-<rule>`` comment that no longer
+suppresses a finding of ``<rule>`` on its line is itself reported — a stale
+waiver silently re-opens the line to the exact regression the rule guards
+against. See ``repro.analysis.astlint.run_rules``.
+
 Run as ``python -m repro.analysis`` (what ``make analyze`` does). The whole
 path is stdlib-only: nothing here imports numpy or the protocol modules.
 """
@@ -75,7 +81,9 @@ class AssertBanRule(ModuleRule):
     name = "assert-ban"
     scope = ASSERT_SCOPE
 
-    def check(self, relpath, tree, lines) -> Iterator[Finding]:
+    def check(
+        self, relpath: str, tree: ast.Module, lines: list[str]
+    ) -> Iterator[Finding]:
         for node in ast.walk(tree):
             if isinstance(node, ast.Assert):
                 yield Finding(
@@ -89,7 +97,9 @@ class DeterminismRule(ModuleRule):
     name = "determinism"
     scope = PROTOCOL_SCOPE
 
-    def check(self, relpath, tree, lines) -> Iterator[Finding]:
+    def check(
+        self, relpath: str, tree: ast.Module, lines: list[str]
+    ) -> Iterator[Finding]:
         for node in ast.walk(tree):
             if isinstance(node, ast.Import):
                 for alias in node.names:
@@ -150,7 +160,9 @@ class SetIterationRule(ModuleRule):
                     bucket.add(t.id)
         return yes - no
 
-    def check(self, relpath, tree, lines) -> Iterator[Finding]:
+    def check(
+        self, relpath: str, tree: ast.Module, lines: list[str]
+    ) -> Iterator[Finding]:
         tracked = self._set_names(tree)
 
         def bad(node: ast.AST) -> bool:
@@ -201,10 +213,14 @@ class StateMapBypassRule(ModuleRule):
 
     _TRACKED = frozenset({"abd", "ec", "next_c", "_rcache", "_rkeys"})
 
-    def check(self, relpath, tree, lines) -> Iterator[Finding]:
+    def check(
+        self, relpath: str, tree: ast.Module, lines: list[str]
+    ) -> Iterator[Finding]:
         yield from self._visit(relpath, tree, in_init=False)
 
-    def _visit(self, relpath, node, in_init) -> Iterator[Finding]:
+    def _visit(
+        self, relpath: str, node: ast.AST, in_init: bool
+    ) -> Iterator[Finding]:
         for child in ast.iter_child_nodes(node):
             if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 yield from self._visit(
@@ -263,7 +279,9 @@ class RegistryDriftRule(RepoRule):
                     tags.add(s)
         return tags
 
-    def _server_vocab(self, tree: ast.Module):
+    def _server_vocab(
+        self, tree: ast.Module
+    ) -> tuple[dict[str, int], dict[str, int], set[str]]:
         """(dispatch {op: line}, read_only {op: line}, reply tags)."""
         dispatch: dict[str, int] = {}
         read_only: dict[str, int] = {}
@@ -286,7 +304,7 @@ class RegistryDriftRule(RepoRule):
                     replies |= self._return_tags(stmt)
         return dispatch, read_only, replies
 
-    def _gossip_vocab(self, tree: ast.Module):
+    def _gossip_vocab(self, tree: ast.Module) -> tuple[set[str], set[str]]:
         """(handled ops, reply tags) of ``GossipListener.handle``."""
         ops: set[str] = set()
         replies: set[str] = set()
@@ -428,7 +446,7 @@ def package_root() -> Path:
     return Path(__file__).resolve().parents[1]
 
 
-def collect_findings(root: Path | None = None):
+def collect_findings(root: Path | None = None) -> list[Finding]:
     """All findings over ``root`` (default: this repo's ``src/repro``)."""
     return run_rules(root or package_root(), MODULE_RULES, REPO_RULES)
 

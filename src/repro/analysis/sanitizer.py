@@ -76,7 +76,7 @@ _KNOWN_TAGS = MESSAGE_TYPES | GOSSIP_TYPES
 _KNOWN_REPLIES = REPLY_TYPES | GOSSIP_REPLY_TYPES
 
 
-def _max_tag(entries) -> Any:
+def _max_tag(entries: Any) -> Any:
     """Max tag of an ``ec-list``-shaped ``((tag, elem), ...)``; None when
     empty (a filtered reply that shipped nothing proves no maximum)."""
     best = None
@@ -95,16 +95,16 @@ class ProtocolSanitizer:
         # Smallest k => smallest legal quorum, so an ambiguous server set
         # (two configs, same servers, different k) stays conservative:
         # a fan-out legal under EITHER config passes.
-        self.known_k: dict[frozenset, int] = {}
+        self.known_k: dict[frozenset[str], int] = {}
         # (sid, obj) -> {("abd", idx): tag, ("ec", idx): tag,
         #                ("next", idx): (cfg_id, status),
         #                ("ballot", idx): ballot}
-        self._hw: dict[tuple, dict] = {}
+        self._hw: dict[tuple[str, Any], dict[Any, Any]] = {}
         self.checks = 0       # fan-outs + replies inspected
         self.forgets = 0      # external-mutation resets observed
 
     # ------------------------------------------------------------ wiring
-    def attach(self, net) -> "ProtocolSanitizer":
+    def attach(self, net: Any) -> "ProtocolSanitizer":
         """Install on a Network: hook the RPC/reply observation points and
         the external-mutation observer of every (current and future)
         server."""
@@ -114,7 +114,7 @@ class ProtocolSanitizer:
                 srv._mut_observer = self.forget
         return self
 
-    def register_config(self, cfg) -> None:
+    def register_config(self, cfg: Any) -> None:
         """Learn a configuration's EC parameters (idempotent; non-EC and
         malformed values are ignored — the sanitizer only ever *observes*)."""
         servers = getattr(cfg, "servers", None)
@@ -134,7 +134,7 @@ class ProtocolSanitizer:
             self.forgets += 1
 
     # ------------------------------------------------------------ fan-out
-    def on_rpc(self, rpc, need) -> None:
+    def on_rpc(self, rpc: Any, need: int | None) -> None:
         """Quorum-intersection check at issue time. ``need`` is the resolved
         numeric requirement (post ``min(need, len(dests))`` clamp); alive-
         mode fan-outs pass ``None`` and are skipped."""
@@ -263,13 +263,13 @@ class ProtocolSanitizer:
                 self._ballot(sid, obj, idx, r)
 
     # ------------------------------------------------------- state tracking
-    def _rec(self, sid: str, obj: Any) -> dict:
+    def _rec(self, sid: str, obj: Any) -> dict[Any, Any]:
         rec = self._hw.get((sid, obj))
         if rec is None:
             rec = self._hw[(sid, obj)] = {}
         return rec
 
-    def _tag_floor(self, sid, obj, kind, idx, observed) -> None:
+    def _tag_floor(self, sid: str, obj: Any, kind: str, idx: Any, observed: Any) -> None:
         """Observed tag must not regress below the high-water; then raises
         the high-water to it."""
         rec = self._rec(sid, obj)
@@ -284,7 +284,7 @@ class ProtocolSanitizer:
         if hw is None or observed > hw:
             rec[key] = observed
 
-    def _raise_floor(self, sid, obj, kind, idx, tag) -> None:
+    def _raise_floor(self, sid: str, obj: Any, kind: str, idx: Any, tag: Any) -> None:
         """An acked put: the server stores >= tag from now on (no check —
         acks never reveal a regression, they only raise the floor)."""
         rec = self._rec(sid, obj)
@@ -293,7 +293,7 @@ class ProtocolSanitizer:
         if hw is None or tag > hw:
             rec[key] = tag
 
-    def _next_c(self, sid, obj, idx, entry, announced: bool = False) -> None:
+    def _next_c(self, sid: str, obj: Any, idx: Any, entry: Any, announced: bool = False) -> None:
         """Successor-config stickiness: once a server proves ⟨c, F⟩ at an
         index, later observations must stay exactly ⟨c, F⟩ (consensus makes
         the config unique; F never demotes). ``announced=True`` records an
@@ -325,7 +325,7 @@ class ProtocolSanitizer:
         if entry is not None:
             self.register_config(entry[0])
 
-    def _ballot(self, sid, obj, idx, r) -> None:
+    def _ballot(self, sid: str, obj: Any, idx: Any, r: Any) -> None:
         """Acceptor promise monotonicity: the ballot a nack reports is the
         server's current promise, which only ever grows."""
         if not (isinstance(r, tuple) and r and r[0] in ("p1-nack", "p2-nack")):
@@ -343,7 +343,7 @@ class ProtocolSanitizer:
             rec[key] = ballot
 
     # ------------------------------------------------------------- report
-    def report(self) -> dict:
+    def report(self) -> dict[str, int]:
         return {
             "checks": self.checks,
             "forgets": self.forgets,

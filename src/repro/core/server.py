@@ -121,6 +121,12 @@ class StorageServer(Server):
     # injected loss as a protocol bug. None (the default) costs one
     # attribute read per handle() call and nothing per mutation.
     _mut_observer = None
+    # Happens-before race-tracker hook (repro.analysis.races): when set,
+    # EVERY per-object invalidation is reported as
+    # ``_race_observer(sid, obj, in_handle)`` — in-handle mutations are the
+    # writes the vector-clock tracker orders and checks; out-of-handle ones
+    # are external surgery it forgives (mirroring ``_mut_observer``).
+    _race_observer = None
     _in_handle = False
 
     def __init__(self, sid: str):
@@ -148,6 +154,9 @@ class StorageServer(Server):
         obs = self._mut_observer
         if obs is not None and not self._in_handle:
             obs(self.sid, obj)
+        robs = self._race_observer
+        if robs is not None:
+            robs(self.sid, obj, self._in_handle)
 
     # ------------------------------------------------------------------ state
     def _abd_state(self, key: tuple) -> tuple[Tag, Any]:
@@ -175,10 +184,10 @@ class StorageServer(Server):
 
     # ---------------------------------------------------------------- handler
     def handle(self, sender: str, msg: tuple) -> Any:
-        if self._mut_observer is None:
+        if self._mut_observer is None and self._race_observer is None:
             return self._handle(sender, msg)
-        # sanitized run: protocol-driven mutations inside the handler must
-        # NOT be reported as external surgery
+        # sanitized/race-checked run: protocol-driven mutations inside the
+        # handler must NOT be reported as external surgery
         self._in_handle = True
         try:
             return self._handle(sender, msg)

@@ -64,6 +64,12 @@ class DSSParams:
     # environment (how CI runs a sanitized tier-1 pass). Pure observer —
     # sanitized traces are bit-identical to unsanitized ones.
     sanitize: bool = False
+    # ISSUE 9 — vector-clock happens-before race tracker
+    # (repro.analysis.races): orders every in-handle mutation of per-object
+    # server state against the issuing operations' vector clocks and fails
+    # the run on a conflicting unordered regression. Also enabled by
+    # REPRO_RACECHECK=1. Pure observer like the sanitizer.
+    racecheck: bool = False
     latency: LatencyModel = dc_field(default_factory=LatencyModel)
 
 
@@ -278,6 +284,10 @@ class DSS:
             self._recon_subs.append(
                 lambda cfg, idx, objs: san.register_config(cfg)
             )
+        if p.racecheck or os.environ.get("REPRO_RACECHECK") == "1":
+            from repro.analysis.races import RaceTracker
+
+            RaceTracker().attach(self.net)
 
     def _notify_recon(self, config: Config, cfg_idx: int, objs) -> None:
         for sub in list(self._recon_subs):

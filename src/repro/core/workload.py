@@ -209,6 +209,10 @@ class WorkloadGen:
                 "linearized_ops": lin["ops"],
                 "strict_reads": strict,
             })
+        if getattr(net, "race_tracker", None) is not None:
+            # race-checked run (ISSUE 9): every in-handle mutation was
+            # ordered and summary-checked live; surface the counters.
+            report["races"] = net.race_tracker.report()
         if spec.collect_latencies:
             lats = [
                 f.stats.latency

@@ -49,6 +49,36 @@ Determinism is the contract: for a fixed seed the fast path replays
 (``fast=False``), which draws the same canonical per-fan-out stream but pays
 the seed implementation's per-message costs. ``tests/test_scalepath.py``
 pins trace identity on mixed workloads.
+
+Schedule control (ISSUE 9)
+--------------------------
+``Network.controller`` (default ``None``) hands the event loop's pop policy
+to an external scheduler — ``repro.analysis.explore.ScheduleController`` —
+so a model checker can turn "which pending delivery lands next" into an
+explicit, replayable decision. With a controller attached:
+
+* ``run``/``step`` call ``controller.step(net)`` instead of popping the
+  heap min, and every ``schedule`` call reports its ``(seq, key)`` so the
+  controller can reason about which events commute (``key`` labels the
+  event's target endpoint: ``("srv", sid)`` for message arrivals,
+  ``("rpl", client)`` for reply deliveries, ``("cli", client)`` for op
+  resumes/timers);
+* ``_FanOut`` stops inline-draining — every arrival re-enters the heap as
+  its own event, so each delivery is its own decision point (the cursor's
+  reserved sequence numbers are unchanged, so a controller that always
+  picks the heap minimum replays the exact uncontrolled trace);
+* the controller may mark the event it executes as *dropped*
+  (``consume_drop``): a dropped arrival never reaches ``handle`` and a
+  dropped reply never reaches the op — message loss as a schedulable
+  choice, drawn from no RNG stream.
+
+``Network.race_tracker`` (default ``None``) is a second pure observer —
+``repro.analysis.races.RaceTracker`` — fed from the same three points as
+the sanitizer (RPC issue, arrival processing, counted reply delivery) plus
+the tracked-map mutation hooks in ``core/server.py``; it maintains
+vector clocks per operation and flags conflicting unordered writes to
+per-object server state. Both attributes cost one ``is not None`` per
+event when unset, and neither draws randomness nor schedules events.
 """
 from __future__ import annotations
 
@@ -231,8 +261,20 @@ class _RpcState:
         self.resumed = False
 
     def deliver(self, sid: str, reply: Any) -> None:
+        net = self.net
+        ctrl = net.controller
+        if ctrl is not None and ctrl.consume_drop():
+            # the controller chose to lose this reply in flight: the op never
+            # sees it (alive-mode needs shrink so the op cannot hang).
+            ctrl.reply_dropped(sid, reply)
+            if not self.resumed:
+                self.abandon(sid)
+            return
         if self.resumed:
             return  # late reply past the quorum: ignored
+        rt = net.race_tracker
+        if rt is not None:
+            rt.on_reply(sid, self)
         self.replies[sid] = reply
         if len(self.replies) >= self.need:
             self.resumed = True
@@ -291,6 +333,23 @@ class _FanOut:
 
     def fire(self) -> None:
         net = self.net
+        if net.controller is not None:
+            # Controlled mode: one arrival per heap event — no inline drain,
+            # so every delivery is its own decision point. The cursor still
+            # walks arrivals in arrival-time order under the reserved seqs;
+            # since a fan-out's arrivals target DISTINCT servers, any
+            # interleaving of them is Mazurkiewicz-equivalent to a
+            # cursor-respecting one, so no schedules are lost to this.
+            pos = self.pos
+            j = self.order[pos]
+            self.pos = pos + 1
+            self._process(j)
+            if self.pos < self.nd:
+                nj = self.order[self.pos]
+                heapq.heappush(
+                    net._events, (self.arr[nj], self.seq0 + nj, self.fire)
+                )
+            return
         arr = self.arr
         order = self.order
         seq0 = self.seq0
@@ -323,16 +382,26 @@ class _FanOut:
         state = self.state
         srv = self.srvs[j]
         sid = self.sids[j]
+        ctrl = net.controller
+        if ctrl is not None and ctrl.consume_drop():
+            # schedulable message loss: the arrival never reaches handle()
+            state.abandon(sid)
+            return
         if srv.crashed:
             state.abandon(sid)
             return
         msg = self.shared_msg if self.msgs is None else self.msgs[j]
+        rt = net.race_tracker
+        if rt is not None:
+            rt.before_handle(sid, state)
         if net.profile_protocol:
             t0 = perf_counter()
             reply = srv.handle(state.fut.client, msg)
             net.protocol_time += perf_counter() - t0
         else:
             reply = srv.handle(state.fut.client, msg)
+        if rt is not None:
+            rt.after_handle(sid)
         if reply is None:
             state.abandon(sid)
             return
@@ -349,7 +418,10 @@ class _FanOut:
         if not deliver:
             state.abandon(sid)
             return
-        net.schedule(rdelay, partial(state.deliver, sid, reply))
+        net.schedule(
+            rdelay, partial(state.deliver, sid, reply),
+            ("rpl", None, state.fut.client),
+        )
 
 
 class Network:
@@ -431,6 +503,15 @@ class Network:
         # schedules nothing, so sanitized traces stay bit-identical. Cost
         # when unset is one ``is not None`` per fan-out/reply.
         self.sanitizer = None
+        # optional schedule controller (repro.analysis.explore) — see the
+        # "Schedule control" section of the module docstring. While set, the
+        # event loop's pop policy (and optional message loss) is the
+        # controller's decision; unset, behavior is bit-identical to before.
+        self.controller = None
+        # optional happens-before race tracker (repro.analysis.races): a pure
+        # observer fed at RPC issue / arrival handle / counted reply delivery
+        # plus the tracked-map mutation hooks in core/server.py.
+        self.race_tracker = None
 
     # -- topology ------------------------------------------------------------
     def add_server(self, server: Server) -> None:
@@ -438,6 +519,8 @@ class Network:
         self._dest_cache.clear()  # cached fan-outs may now resolve more dests
         if self.sanitizer is not None and hasattr(server, "_mut_observer"):
             server._mut_observer = self.sanitizer.forget
+        if self.race_tracker is not None and hasattr(server, "_race_observer"):
+            server._race_observer = self.race_tracker.on_mutation
 
     def crash(self, sid: str) -> None:
         self.servers[sid].crashed = True
@@ -449,12 +532,22 @@ class Network:
         return [s for s, srv in self.servers.items() if not srv.crashed]
 
     # -- event loop ------------------------------------------------------------
-    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
+    def schedule(
+        self, delay: float, fn: Callable[[], None], key: tuple | None = None
+    ) -> None:
         # clamp: a negative (or NaN) delay must not reorder virtual time —
         # events fire no earlier than now (ISSUE 7).
         t = self.now + delay if delay > 0.0 else self.now
         s = self._seq
         self._seq = s + 1
+        ctrl = self.controller
+        if ctrl is not None:
+            # ``key`` labels what the event touches — ("srv", sid, client)
+            # for arrivals, ("rpl", None, client) for reply deliveries,
+            # ("cli", None, client) for op resumes/timers, ("snd", None,
+            # client) for RNG-drawing fan-out sends, None = conservative
+            # "conflicts with everything".
+            ctrl.note(s, key)
         heapq.heappush(self._events, (t, s, fn))
 
     def run(self, until: float | None = None, max_events: int = 50_000_000) -> None:
@@ -463,16 +556,28 @@ class Network:
         self._run_limit = limit
         events = self._events
         n = 0
+        ctrl = self.controller
         try:
-            while events and n < max_events:
-                t, _, fn = events[0]
-                if t > limit:
-                    break
-                heapq.heappop(events)
-                self.now = t
-                self.events_processed += 1
-                fn()
-                n += 1
+            if ctrl is not None:
+                # controlled mode: the controller picks which pending event
+                # fires (and may drop it); the ``until`` window is judged on
+                # the earliest pending time, same as the uncontrolled loop.
+                while events and n < max_events:
+                    if events[0][0] > limit:
+                        break
+                    if not ctrl.step(self):
+                        break
+                    n += 1
+            else:
+                while events and n < max_events:
+                    t, _, fn = events[0]
+                    if t > limit:
+                        break
+                    heapq.heappop(events)
+                    self.now = t
+                    self.events_processed += 1
+                    fn()
+                    n += 1
         finally:
             self._run_limit = prev
         if n >= max_events:  # pragma: no cover
@@ -483,6 +588,9 @@ class Network:
         (``api.OpFuture.result``) drive the loop until a condition holds
         without running unrelated traffic — e.g. a repair daemon — to
         quiescence."""
+        ctrl = self.controller
+        if ctrl is not None:
+            return bool(self._events) and ctrl.step(self)
         if not self._events:
             return False
         t, _, fn = heapq.heappop(self._events)
@@ -639,7 +747,7 @@ class Network:
             fut.start = self.now
             self._step(gen, fut, None, on_done)
 
-        self.schedule(delay, start)
+        self.schedule(delay, start, ("cli", None, client))
         return fut
 
     def run_op(self, gen: Generator, **kw) -> Any:
@@ -675,13 +783,21 @@ class Network:
         if prof:
             self.protocol_time += perf_counter() - t0
         if isinstance(effect, Sleep):
-            self.schedule(effect.duration, lambda: self._step(gen, fut, None, on_done))
+            self.schedule(
+                effect.duration,
+                lambda: self._step(gen, fut, None, on_done),
+                ("cli", None, fut.client),
+            )
         elif isinstance(effect, RPC):
             self._run_rpc(effect, gen, fut, on_done)
         elif isinstance(effect, Join):
             n = len(effect.children)
             if n == 0:
-                self.schedule(0.0, lambda: self._step(gen, fut, [], on_done))
+                self.schedule(
+                    0.0,
+                    lambda: self._step(gen, fut, [], on_done),
+                    ("cli", None, fut.client),
+                )
                 return
             results = [None] * n
             state = {"left": n}
@@ -735,13 +851,20 @@ class Network:
             self, gen, fut, on_done, acct, self._intern(fut.client),
             need, alive_mode, counted,
         )
+        rt = self.race_tracker
+        if rt is not None:
+            rt.on_issue(state, rpc)
         send = self._fast_send if self.fast_rpc else self._legacy_send
-        self.schedule(rpc.pre_delay, partial(send, rpc, state))
+        # "snd" events draw pooled RNG and touch shared NIC state: the
+        # controller treats them as conflicting with everything.
+        self.schedule(rpc.pre_delay, partial(send, rpc, state),
+                      ("snd", None, fut.client))
         if need <= 0:
             # nothing can (or needs to) reply — messages still go out, but the
             # op resumes immediately with no replies (guarded against a
             # straggler reply re-resuming the generator).
-            self.schedule(rpc.pre_delay, state.resume_empty)
+            self.schedule(rpc.pre_delay, state.resume_empty,
+                          ("cli", None, fut.client))
 
     # Both send paths share one canonical RNG schedule per fan-out over the B
     # destinations that exist: 2B latency props from ``rng`` (outbound then
@@ -876,6 +999,11 @@ class Network:
         # earliest arrival only.
         seq0 = self._seq
         self._seq = seq0 + nd
+        ctrl = self.controller
+        if ctrl is not None:
+            client = state.fut.client
+            for j in range(nd):
+                ctrl.note(seq0 + j, ("srv", d_sids[j], client))
         order = [0] if nd == 1 else sorted(range(nd), key=arr.__getitem__)
         fan = _FanOut(
             self, state, d_sids, d_srvs, d_msgs,
@@ -946,15 +1074,24 @@ class Network:
                 rprop=rprops[j],
                 rlost=rdrop is not None and rdrop[j],
             ) -> None:
+                ctrl = self.controller
+                if ctrl is not None and ctrl.consume_drop():
+                    state.abandon(sid)
+                    return
                 if srv.crashed:
                     state.abandon(sid)
                     return
+                rt = self.race_tracker
+                if rt is not None:
+                    rt.before_handle(sid, state)
                 if self.profile_protocol:
                     t0 = perf_counter()
                     reply = srv.handle(client, msg)
                     self.protocol_time += perf_counter() - t0
                 else:
                     reply = srv.handle(client, msg)
+                if rt is not None:
+                    rt.after_handle(sid)
                 if reply is None:
                     state.abandon(sid)
                     return
@@ -970,8 +1107,9 @@ class Network:
                 if rlost:
                     state.abandon(sid)
                     return
-                self.schedule(rdelay, lambda: state.deliver(sid, reply))
+                self.schedule(rdelay, lambda: state.deliver(sid, reply),
+                              ("rpl", None, client))
 
-            self.schedule(delay, arrive)
+            self.schedule(delay, arrive, ("srv", sid, client))
         for sid in dropped_sids:
             state.abandon(sid)

@@ -64,6 +64,41 @@ def test_waiver_is_per_line_and_per_rule(tmp_path):
     assert not waived(["x  # protocol-lint: allow-r1"], 1, "r2")
 
 
+def test_stale_waiver_flagged(tmp_path):
+    """ISSUE 9 satellite: a waiver whose rule no longer fires on its line
+    is itself a finding — a live waiver stays silent, a stale one (or one
+    naming an unknown rule) is reported."""
+    src = (
+        "def f(x):\n"
+        "    assert x  # protocol-lint: allow-assert-ban (live: suppresses)\n"
+        "    y = 1  # protocol-lint: allow-assert-ban (stale: nothing fires)\n"
+        "    z = 2  # protocol-lint: allow-not-a-rule (unknown rule)\n"
+    )
+    found = _lint(tmp_path, "core/mod.py", src, [AssertBanRule()])
+    assert [(f.rule, f.line) for f in found] == [
+        ("stale-waiver", 3), ("stale-waiver", 4),
+    ]
+
+
+def test_stale_waiver_ignores_docstring_mentions(tmp_path):
+    """Marker text inside a string/docstring is documentation, not a
+    waiver — the scan tokenizes and only counts COMMENT tokens."""
+    src = (
+        '"""Example: use  # protocol-lint: allow-assert-ban  to waive."""\n'
+        "def f(x):\n"
+        "    return x\n"
+    )
+    assert _lint(tmp_path, "core/mod.py", src, [AssertBanRule()]) == []
+
+
+def test_stale_waiver_caught_outside_rule_scope(tmp_path):
+    """A waiver in a file no rule even applies to can never suppress
+    anything — flagged too."""
+    src = "x = 1  # protocol-lint: allow-assert-ban (out of scope)\n"
+    found = _lint(tmp_path, "tools/mod.py", src, [AssertBanRule()])
+    assert [(f.rule, f.line) for f in found] == [("stale-waiver", 1)]
+
+
 def test_determinism_rule(tmp_path):
     src = """
         import time
@@ -193,6 +228,9 @@ def test_repo_is_lint_clean():
     empty — identical to what ``make analyze`` enforces in CI."""
     findings = collect_findings()
     assert findings == [], "\n".join(str(f) for f in findings)
+    # 4 module rules + 1 repo rule in the pack, plus the engine-level
+    # stale-waiver check (ISSUE 9) which collect_findings always applies —
+    # an empty result also proves every waiver in the repo is live.
     assert len(MODULE_RULES) == 4 and len(REPO_RULES) == 1
 
 

@@ -1,0 +1,367 @@
+"""Schedule explorer + happens-before race detector (ISSUE 9).
+
+Layers:
+
+* pinning — the controller hooks in ``net/sim.py`` are pure pass-throughs:
+  with no controller the instrumented engines stay trace-identical to each
+  other, and a ``fifo``-policy controller replays the exact uncontrolled
+  trace on BOTH engines (the "explorer off ⇒ bit-identical" contract);
+* scheduler hygiene — equal-timestamp events fire in schedule order
+  (the shared seq counter's FIFO tie-break) on both engines;
+* the explorer — bounded exhaustive DFS with sleep-set pruning runs the
+  tiny config clean (with crash/drop injections schedulable), and the
+  seeded positive-control faults are all FOUND within budget, each with a
+  repro bundle that replays byte-identically through the JSON round-trip;
+* the race tracker — clean-run counters, the unguarded-put write-write
+  race as a live positive control, and unit-level ordered-vs-unordered
+  classification of a summary regression.
+"""
+import json
+
+import pytest
+
+from repro.analysis.explore import (
+    ExploreConfig,
+    Outcome,
+    ScheduleController,
+    ScheduleDivergence,
+    _fingerprint,
+    conflicts,
+    explore,
+    load_bundle,
+    replay_bundle,
+    run_schedule,
+    write_bundle,
+    SCENARIOS,
+)
+from repro.analysis.races import RaceError, RaceTracker
+from repro.analysis.sanitizer import SanitizerError
+from repro.core.server import StorageServer
+from repro.core.store import DSS, DSSParams
+from repro.net.sim import Network
+
+
+# ------------------------------------------------------------------ pinning
+def _uncontrolled(fast: bool) -> dict:
+    p = DSSParams(algorithm="coabd", n_servers=3, seed=0, fast_net=fast,
+                  sanitize=True, racecheck=True)
+    dss = DSS(p)
+    futs = [
+        dss.net.spawn(gen, kind=kind, client=cid)
+        for cid, kind, gen in SCENARIOS["wr"](dss)
+    ]
+    dss.net.run()
+    assert all(f.done for f in futs)
+    return _fingerprint(dss)
+
+
+def test_fifo_controller_replays_uncontrolled_trace_both_engines():
+    """The tentpole's no-regression contract: controller off = today's
+    trace, and the fifo policy (always the earliest ``(t, seq)``) replays
+    it byte-for-byte — virtual makespan, event/message/byte counters and
+    the recorded history — on the fast AND the legacy engine."""
+    fps = []
+    for fast in (True, False):
+        fp0 = _uncontrolled(fast)
+        out = run_schedule(ExploreConfig.for_scenario("wr", fast_net=fast))
+        assert out.violation is None
+        assert out.fingerprint == fp0, ("fast" if fast else "legacy")
+        fps.append(fp0)
+    assert fps[0] == fps[1]  # fast/legacy trace identity, race-checked
+
+
+def test_equal_timestamp_events_fire_in_schedule_order():
+    """Satellite: the shared seq counter's FIFO tie-break. Same-timestamp
+    events must fire in the order they were scheduled, on both engines —
+    heap tie-breaking is what makes every trace replayable at all."""
+    for fast in (True, False):
+        net = Network(seed=0, fast=fast)
+        ran: list[str] = []
+        for name in ("a", "b", "c", "d"):
+            net.schedule(0.0, lambda n=name: ran.append(n))
+        net.schedule(0.0, lambda: ran.append("e"))
+        net.run()
+        assert ran == ["a", "b", "c", "d", "e"]
+
+
+def test_fifo_controller_equal_timestamp_order_matches():
+    net = Network(seed=0)
+    ran: list[str] = []
+    net.controller = ScheduleController()  # fifo, no plan
+    for name in ("a", "b", "c"):
+        net.schedule(0.0, lambda n=name: ran.append(n), ("cli", None, name))
+    net.run()
+    assert ran == ["a", "b", "c"]
+
+
+# ------------------------------------------------------------- controller
+def test_schedule_divergence_raises():
+    with pytest.raises(ScheduleDivergence, match="does not match"):
+        run_schedule(ExploreConfig.for_scenario("wr"), plan=[("ev", 10**9)])
+
+
+def test_conflict_relation():
+    srv0 = ("srv", "s0", "c1")
+    assert conflicts(None, srv0)                        # unkeyed: everything
+    assert conflicts(("snd", None, "c1"), ("srv", "s2", "c9"))  # RNG draw
+    assert conflicts(srv0, ("srv", "s0", "c2"))         # same server
+    assert conflicts(srv0, ("rpl", None, "c1"))         # same client endpoint
+    assert not conflicts(srv0, ("srv", "s1", "c2"))     # disjoint: commutes
+
+
+# --------------------------------------------------------------- explorer
+def test_dfs_exhausts_tiny_config_clean():
+    """Bounded exhaustive DFS over the 3-server/2-client/1-block scenario
+    with crash AND drop as schedulable choices: no violation anywhere, and
+    the sleep-set pruning actually fires."""
+    cfg = ExploreConfig.for_scenario(
+        "wr", budget=1500, branch_depth=6, crash_budget=1, drop_budget=1,
+        stop_on_first=False,
+    )
+    res = explore(cfg)
+    assert not res.violations
+    assert res.schedules > 100
+    assert res.pruned > 0
+
+
+def test_dfs_without_injections_exhausts_frontier():
+    res = explore(ExploreConfig.for_scenario("wr", budget=500, branch_depth=6))
+    assert res.exhausted and not res.violations
+    assert res.schedules > 10
+
+
+def test_pct_sweep_on_larger_ec_recon_config_is_clean():
+    """Seeded PCT priority schedules on the 5-server EC + concurrent-recon
+    scenario (too big to exhaust): sanitizer + race tracker + Wing–Gong
+    stay silent across the sweep."""
+    cfg = ExploreConfig.for_scenario(
+        "ec-recon", mode="pct", budget=60, stop_on_first=False
+    )
+    res = explore(cfg)
+    assert res.schedules == 60 and not res.violations
+
+
+# ------------------------------------------------- positive-control faults
+def _assert_found_and_replays(cfg: ExploreConfig, expect_type: str) -> dict:
+    res = explore(cfg)
+    assert res.found, (
+        f"fault {cfg.fault!r} NOT found in {res.schedules} schedules"
+    )
+    bundle = res.violations[0]
+    assert bundle["violation"]["type"] == expect_type, bundle["violation"]
+    # satellite: every bundle is stamped with (seed, params, engine)
+    assert bundle["seed_params"]["seed"] == cfg.seed
+    assert bundle["seed_params"]["algorithm"] == cfg.algorithm
+    assert bundle["engine"] == "fast"
+    rep = replay_bundle(bundle)
+    assert rep["reproduced"], rep
+    return bundle
+
+
+def test_explorer_finds_early_read_resume_quorum_bug():
+    """PR-7's seeded quorum off-by-one, reintroduced client-side where the
+    static ``on_rpc`` check can't see it: most schedules still read fresh
+    data; the explorer must steer a lagging server's reply first and catch
+    the stale read via Wing–Gong."""
+    cfg = ExploreConfig.for_scenario(
+        "wr", fault="early-read-resume", mode="pct", budget=500
+    )
+    _assert_found_and_replays(cfg, "LinearizabilityError")
+
+
+def test_explorer_finds_dropped_ack_rollback():
+    """The dropped-ack tag regression: only schedules that (a) drop an
+    abd-put ack in flight and (b) later route a get through that server
+    violate — found via the sanitizer's reply-monotonicity floor."""
+    cfg = ExploreConfig.for_scenario(
+        "wr", fault="ack-rollback", mode="pct", drop_budget=1, budget=500
+    )
+    b = _assert_found_and_replays(cfg, "SanitizerError")
+    assert "monotonicity" in b["violation"]["message"]
+
+
+def test_dfs_finds_unguarded_put_write_write_race():
+    """Dropping the ``tag > cur`` guard turns concurrent writers into a
+    genuine write-write race; the bounded DFS finds the interleaving and
+    the vector clocks classify it as UNORDERED."""
+    cfg = ExploreConfig.for_scenario(
+        "ww", fault="unguarded-put", mode="dfs", budget=200, branch_depth=6
+    )
+    b = _assert_found_and_replays(cfg, "RaceError")
+    assert "regressed abd state" in b["violation"]["message"]
+
+
+def test_fault_hooks_restore_handlers():
+    before_put = StorageServer._DISPATCH["abd-put"]
+    before_putb = StorageServer._DISPATCH["abd-put-batch"]
+    for fault, kw in (
+        ("early-read-resume", {}),
+        ("ack-rollback", {"drop_budget": 1}),
+        ("unguarded-put", {}),
+    ):
+        run_schedule(ExploreConfig.for_scenario("wr", fault=fault, **kw))
+        assert StorageServer._DISPATCH["abd-put"] is before_put
+        assert StorageServer._DISPATCH["abd-put-batch"] is before_putb
+
+
+# ----------------------------------------------------------------- bundles
+def test_bundle_json_roundtrip_replays_byte_identically(tmp_path):
+    cfg = ExploreConfig.for_scenario(
+        "ww", fault="unguarded-put", mode="dfs", budget=200, branch_depth=6
+    )
+    res = explore(cfg)
+    assert res.found
+    path = write_bundle(res.violations[0], str(tmp_path))
+    loaded = load_bundle(path)
+    assert loaded == json.loads(json.dumps(loaded))  # JSON-stable
+    rep = replay_bundle(loaded)
+    assert rep["reproduced"] and rep["fingerprint_matches"]
+
+
+def test_bundle_version_gate(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text('{"version": 99}')
+    with pytest.raises(ValueError, match="bundle version"):
+        load_bundle(str(p))
+
+
+# ------------------------------------------------------------ race tracker
+def test_racecheck_param_and_env_attach_tracker(monkeypatch):
+    dss = DSS(DSSParams(algorithm="coabd", n_servers=3, racecheck=True))
+    assert dss.net.race_tracker is not None
+    assert dss.net.servers["s0"]._race_observer is not None
+    monkeypatch.setenv("REPRO_RACECHECK", "1")
+    dss2 = DSS(DSSParams(algorithm="coabd", n_servers=3))
+    assert dss2.net.race_tracker is not None
+
+
+def test_race_tracker_clean_run_counters():
+    dss = DSS(DSSParams(algorithm="coaresabd", n_servers=3, racecheck=True))
+    sess = dss.session("c1")
+    sess.write("f", b"v1")
+    sess.write("f", b"v2")
+    dss.run()
+    sess.read("f")
+    dss.run()
+    rep = dss.net.race_tracker.report()
+    assert rep["mutations"] > 0 and rep["checks"] > 0
+    assert rep["ops"] >= 2 and rep["tracked"] >= 1
+
+
+def test_race_tracker_forgives_external_surgery():
+    from repro.core.tags import TAG0
+
+    dss = DSS(DSSParams(algorithm="coaresabd", n_servers=3, racecheck=True))
+    sess = dss.session("c1")
+    sess.write("f", b"v1")
+    dss.run()
+    srv = dss.net.servers["s0"]
+    srv.abd[("f", 0)] = (TAG0, None)  # tracked map, outside handle: forgiven
+    sess.read("f")
+    dss.run()
+    assert dss.net.race_tracker.forgets >= 1
+
+
+class _FakeFut:
+    def __init__(self, op_id):
+        self.op_id = op_id
+        self.client = f"c{op_id}"
+        self.kind = "t"
+
+
+class _FakeState:
+    def __init__(self, op_id):
+        self.fut = _FakeFut(op_id)
+
+
+def _tracker_with_server():
+    class _Net:
+        pass
+
+    net = _Net()
+    srv = StorageServer("s0")
+    net.servers = {"s0": srv}
+    net.race_tracker = None
+    rt = RaceTracker()
+    rt.net = net
+    return rt, srv
+
+
+def _handled_put(rt, srv, state, tag):
+    rt.before_handle("s0", state)
+    srv.abd[("f", 0)] = (tag, b"v")
+    rt.on_mutation("s0", "f", True)
+    rt.after_handle("s0")
+
+
+def test_race_tracker_classifies_unordered_regression():
+    """Two ops with NO happens-before edge both write; the second lands a
+    lower tag: UNORDERED write-write race."""
+    rt, srv = _tracker_with_server()
+    s1, s2 = _FakeState(1), _FakeState(2)
+    rt.on_issue(s1, None)
+    rt.on_issue(s2, None)  # snapshots taken before any reply: concurrent
+    _handled_put(rt, srv, s1, (2, "c1"))
+    rt.before_handle("s0", s2)
+    srv.abd[("f", 0)] = ((1, "c2"), b"w")
+    rt.on_mutation("s0", "f", True)
+    with pytest.raises(RaceError, match="UNORDERED"):
+        rt.after_handle("s0")
+
+
+def test_race_tracker_classifies_ordered_lost_update():
+    """The second op ISSUES after receiving a reply from the server that
+    handled the first (a real happens-before path): the same regression is
+    a plain lost-update bug, not a race."""
+    rt, srv = _tracker_with_server()
+    s1 = _FakeState(1)
+    rt.on_issue(s1, None)
+    _handled_put(rt, srv, s1, (2, "c1"))
+    # op 2's query round touches s0 and its reply is counted...
+    s2q = _FakeState(2)
+    rt.on_issue(s2q, None)
+    rt.before_handle("s0", s2q)
+    rt.after_handle("s0")
+    rt.on_reply("s0", s2q)
+    # ...so its put round's snapshot contains op 1's issue event
+    s2p = _FakeState(2)
+    rt.on_issue(s2p, None)
+    rt.before_handle("s0", s2p)
+    srv.abd[("f", 0)] = ((1, "c2"), b"w")
+    rt.on_mutation("s0", "f", True)
+    with pytest.raises(RaceError, match="ordered AFTER"):
+        rt.after_handle("s0")
+
+
+def test_race_tracker_benign_concurrent_writes_counted():
+    rt, srv = _tracker_with_server()
+    s1, s2 = _FakeState(1), _FakeState(2)
+    rt.on_issue(s1, None)
+    rt.on_issue(s2, None)
+    _handled_put(rt, srv, s1, (1, "c1"))
+    _handled_put(rt, srv, s2, (1, "c2"))  # higher tag: monotone, no raise
+    assert rt.concurrent_writes == 1
+    assert rt.report()["checks"] == 2
+
+
+def test_workload_report_surfaces_race_counters():
+    from repro.core.workload import WorkloadGen, WorkloadSpec
+
+    spec = WorkloadSpec(sessions=20, files=4, file_size=256)
+    rep = WorkloadGen(spec, seed=3).run(
+        DSS(DSSParams(algorithm="coabd", n_servers=3, seed=3,
+                      sanitize=True, racecheck=True))
+    )
+    assert rep["ops_done"] == 20
+    assert rep["races"]["mutations"] > 0
+    assert rep["races"]["checks"] > 0
+
+
+# -------------------------------------------------- outcome report plumbing
+def test_run_schedule_reports_counters():
+    out = run_schedule(ExploreConfig.for_scenario("wr"))
+    assert isinstance(out, Outcome)
+    assert out.report["ops"] == 2 and out.report["ops_incomplete"] == 0
+    assert out.report["sanitizer"]["checks"] > 0
+    assert out.report["races"]["checks"] > 0
+    assert len(out.trace) == out.fingerprint["events"]

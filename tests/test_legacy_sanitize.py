@@ -1,0 +1,97 @@
+"""Sanitizer + race-tracker hooks on the LEGACY network engine (ISSUE 9).
+
+The PR-7/8 observer hooks were exercised almost exclusively through the
+fast ``_FanOut`` path (``DSSParams.fast_net=True``, the default); the
+legacy per-destination engine carries its own copies of the ``on_rpc`` /
+``on_reply`` / drop / race brackets inside ``_legacy_send``. This module
+runs a representative sanitized subset of the tier-1 surface with
+``fast_net=False`` so those hooks are tested — and pins the legacy
+sanitized trace bit-identical to the fast sanitized trace, which is the
+strongest statement that both engines drive the same observer sequence.
+"""
+import pytest
+
+from repro.analysis.sanitizer import SanitizerError
+from repro.core.store import DSS, DSSParams
+from repro.core.tags import TAG0
+from repro.core.workload import CrashStorm, WorkloadGen, WorkloadSpec
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+def _params(**kw) -> DSSParams:
+    kw.setdefault("fast_net", False)
+    kw.setdefault("sanitize", True)
+    return DSSParams(**kw)
+
+
+def test_legacy_sanitized_workload_matches_fast_trace():
+    """Mixed zipfian reads/writes + a crash storm on the legacy engine with
+    the sanitizer AND race tracker live: clean, and every trace counter is
+    bit-identical to the fast engine's sanitized run."""
+    spec = WorkloadSpec(sessions=80, files=8, file_size=512,
+                        read_fraction=0.8,
+                        storms=(CrashStorm(at=0.05, frac=0.25, duration=0.03),))
+    legacy = WorkloadGen(spec, seed=11).run(
+        DSS(_params(algorithm="coaresecf", seed=11, racecheck=True))
+    )
+    fast = WorkloadGen(spec, seed=11).run(
+        DSS(_params(algorithm="coaresecf", seed=11, racecheck=True,
+                    fast_net=True))
+    )
+    assert legacy["sanitizer"]["checks"] > 100
+    assert legacy["races"]["checks"] > 0
+    for key in ("rpc_rounds", "msg_count", "bytes_sent", "events",
+                "virtual_makespan", "ops_done", "ops_failed"):
+        assert legacy[key] == fast[key], key
+
+
+def test_legacy_sanitized_recon_path():
+    """ABD -> EC reconfiguration with fresh servers through the legacy
+    engine: config registration and the per-reply checks stay clean."""
+    dss = DSS(_params(algorithm="coaresec", n_servers=5, parity_m=1, seed=2))
+    sess = dss.session("c1")
+    sess.write("f", b"a" * 512)
+    dss.run()
+    target = dss.make_config(n_servers=5, parity_m=2, fresh_servers=True)
+    sess.recon("f", target)
+    dss.run()
+    sess.read("f")
+    dss.run()
+    san = dss.net.sanitizer
+    assert san.known_k[frozenset(target.servers)] == target.k
+    assert dss.check_history()["ops"] >= 2
+
+
+def test_legacy_sanitizer_catches_tag_regression():
+    """The bypassing-regression control from the fast-engine suite, on the
+    legacy reply path: ``on_reply`` inside ``_legacy_send``'s arrive
+    closure must catch it."""
+    dss = DSS(_params(algorithm="coaresabd", n_servers=3, seed=0))
+    sess = dss.session("c1")
+    sess.write("f", b"v1")
+    dss.run()
+    sess.read("f")
+    dss.run()
+    srv = dss.net.servers["s0"]
+    dict.__setitem__(srv.abd, ("f", 0), (TAG0, None))
+    dict.clear(srv._rcache)
+    dict.clear(srv._rkeys)
+    sess.read("f")
+    with pytest.raises(SanitizerError, match="monotonicity"):
+        dss.run()
+
+
+def test_legacy_sanitized_fragmented_write_read():
+    """Fragmented store (genesis + blocks, batched RPCs) sanitized on the
+    legacy engine, closing with the strict Wing–Gong pass."""
+    dss = DSS(_params(algorithm="coaresecf", n_servers=4, seed=5,
+                      racecheck=True))
+    sess = dss.session("c1")
+    sess.write("f", bytes(range(256)) * 24)
+    dss.run()
+    fut = sess.read("f")
+    dss.run()
+    assert fut.result() == bytes(range(256)) * 24
+    assert dss.check_history()["ops"] >= 2
+    assert dss.net.race_tracker.report()["checks"] > 0

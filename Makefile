@@ -13,6 +13,10 @@
 #   make bench-smoke   every benchmark harness at its smallest point (CI);
 #                      FAILS if quorum-round counts regress versus
 #                      benchmarks/smoke_baseline.json (per-metric tolerance)
+#   make bench-chaos   beyond-quorum crash-storm chaos bench (ISSUE 10):
+#                      retry machinery armed, EVERY server crashes then
+#                      recovers; FAILS if availability / stuck-op / retry-
+#                      amplification floors in smoke_baseline.json are missed
 #   make lint          ruff check (the CI lint job; pip install ruff)
 #   make analyze       protocol-invariant AST lint pack (stdlib-only:
 #                      registry drift, assert ban, determinism, set
@@ -20,7 +24,7 @@
 #   make sanitize-test tier-1 suite with the runtime protocol sanitizer on
 #                      (REPRO_SANITIZE=1: live quorum/tag/vocabulary checks
 #                      + post-hoc Wing–Gong pass on workload histories)
-#   make explore       schedule explorer (ISSUE 9): selftest (three seeded
+#   make explore       schedule explorer (ISSUE 9): selftest (four seeded
 #                      bugs must be found and replay byte-identically),
 #                      then bounded-exhaustive DFS with crash+drop
 #                      injection and a seeded PCT sweep on the EC-recon
@@ -39,7 +43,7 @@ PY ?= python
 
 .PHONY: test tier1 repair-tests batch-tests kernel-tests bench-repair \
         bench-readpath bench-multifile bench-gateway bench-scale bench-smoke \
-        lint analyze sanitize-test explore replay typecheck dev-deps
+        bench-chaos lint analyze sanitize-test explore replay typecheck dev-deps
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -92,6 +96,9 @@ bench-scale:
 
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.smoke --baseline benchmarks/smoke_baseline.json
+
+bench-chaos:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_chaos --baseline benchmarks/smoke_baseline.json
 
 lint:
 	ruff check src benchmarks examples tests

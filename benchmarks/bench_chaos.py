@@ -1,0 +1,155 @@
+"""Chaos bench (ISSUE 10): availability under a beyond-quorum crash storm.
+
+A seeded zipfian workload runs while EVERY server crashes for a blackout
+window (``beyond_quorum=True`` lifts the n - quorum cap) and then recovers.
+With a :class:`RetryPolicy` armed the RPC tier retransmits through the
+outage and the phase tier re-issues against the current configuration, so
+the run must come back with zero stuck operations, every unrecoverable op
+failing typed (``QuorumUnavailableError``) within its deadline, and post-
+recovery availability at ~100%.
+
+Rows:
+
+* ``chaos_calm``     — retry armed, no storm (the amplification denominator)
+* ``chaos_storm``    — retry armed, beyond-quorum storm; the availability /
+  p99 / stuck numbers CI gates as floors (``smoke_baseline.json``)
+* ``chaos_amplification`` — storm/calm ratios: retry cost in rounds & bytes
+* ``chaos_ablation`` — ``retry=None``: the machinery consumes NOTHING
+  (zero retransmits/timeouts/hedges, fast == legacy trace)
+
+Every trial is asserted trace-identical across the fast and legacy engines
+before its row is emitted — the retry timers, retransmissions and jitter
+draws are part of the deterministic trace contract.
+
+    make bench-chaos    # or: PYTHONPATH=src python -m benchmarks.bench_chaos
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+from repro.core import DSS, DSSParams, CrashStorm, RetryPolicy
+from repro.core.workload import WorkloadGen, WorkloadSpec
+
+BLOCK = (256, 512, 2048)
+STORM = CrashStorm(at=0.05, frac=1.0, duration=0.05, beyond_quorum=True)
+
+
+def _trial(fast: bool, *, sessions: int, retry: RetryPolicy | None,
+           storm: bool, seed: int = 23) -> dict:
+    dss = DSS(DSSParams(
+        algorithm="coaresecf", n_servers=5, parity_m=2, seed=7,
+        min_block=BLOCK[0], avg_block=BLOCK[1], max_block=BLOCK[2],
+        indexed=True, batched=True, fast_net=fast, retry=retry,
+    ))
+    spec = WorkloadSpec(
+        sessions=sessions, files=8, file_size=512, read_fraction=0.6,
+        ops_per_session=2, storms=(STORM,) if storm else (),
+    )
+    rep = WorkloadGen(spec, seed=seed).run(dss)
+    rep["_fingerprint"] = (
+        round(dss.net.now, 12), dss.net.events_processed, dss.net.rpc_rounds,
+        dss.net.msg_count, dss.net.bytes_sent, dss.net.retransmits,
+        dss.net.rpc_timeouts,
+    )
+    return rep
+
+
+def _both_engines(**kw) -> dict:
+    """Run fast + legacy and insist on an identical trace; return the report."""
+    a = _trial(True, **kw)
+    b = _trial(False, **kw)
+    assert a == b, "fast/legacy trace divergence under chaos"
+    return a
+
+
+def _row(label: str, rep: dict) -> dict:
+    ops = rep["ops"]
+    return {
+        "bench": label,
+        "ops": ops,
+        "availability": round(rep["availability"], 4),
+        "availability_after_recovery": round(
+            rep.get("availability_after_recovery", 1.0), 4),
+        "ops_failed": rep["ops_failed"],
+        "ops_stuck": rep["ops_stuck"],
+        "stuck_rpcs": rep["stuck_rpcs"],
+        "quorum_unavailable": rep["quorum_unavailable"],
+        "op_p99_ms": round(rep.get("op_p99", 0.0) * 1e3, 3),
+        "retransmits": rep["retries"]["retransmits"],
+        "rpc_timeouts": rep["retries"]["rpc_timeouts"],
+        "phase_retries": rep["retries"]["op_retries"],
+        "rounds_per_op": round(rep["rpc_rounds"] / ops, 3),
+        "kB_per_op": round(rep["bytes_sent"] / ops / 1e3, 2),
+    }
+
+
+def run(sessions: int = 40) -> list[dict]:
+    rows = []
+
+    calm = _both_engines(sessions=sessions, retry=RetryPolicy(), storm=False)
+    rows.append(_row("chaos_calm", calm))
+
+    storm = _both_engines(sessions=sessions, retry=RetryPolicy(), storm=True)
+    # the availability gate's hard half: a beyond-quorum storm may fail ops
+    # DURING the blackout, but only typed and never stuck
+    assert storm["ops_stuck"] == 0 and storm["stuck_rpcs"] == 0
+    assert storm["ops_failed"] == storm["quorum_unavailable"]
+    rows.append(_row("chaos_storm", storm))
+
+    rows.append({
+        "bench": "chaos_amplification",
+        "rounds_x": round(
+            (storm["rpc_rounds"] / storm["ops"])
+            / (calm["rpc_rounds"] / calm["ops"]), 3),
+        "bytes_x": round(
+            (storm["bytes_sent"] / storm["ops"])
+            / (calm["bytes_sent"] / calm["ops"]), 3),
+        "retransmits_per_op": round(
+            storm["retries"]["retransmits"] / storm["ops"], 3),
+    })
+
+    off = _both_engines(sessions=sessions, retry=None, storm=False)
+    assert off["retries"] == {"retransmits": 0, "rpc_timeouts": 0,
+                              "hedges": 0, "op_retries": 0}
+    rows.append({
+        "bench": "chaos_ablation", "retry": "off",
+        "retransmits": 0,
+        "rounds_per_op": round(off["rpc_rounds"] / off["ops"], 3),
+        "kB_per_op": round(off["bytes_sent"] / off["ops"] / 1e3, 2),
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sessions", type=int, default=40)
+    ap.add_argument("--json", metavar="PATH", default=None)
+    ap.add_argument("--baseline", metavar="PATH", default=None,
+                    help="gate the chaos rows against this baseline file "
+                         "(only metrics naming a bench produced here)")
+    args = ap.parse_args()
+    rows = run(sessions=args.sessions)
+    for r in rows:
+        print(r)
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(rows, indent=2, default=str))
+        print(f"chaos: wrote {len(rows)} rows to {out}", file=sys.stderr)
+    if args.baseline:
+        from benchmarks.smoke import check_baseline
+
+        failures = check_baseline(rows, args.baseline,
+                                  benches={r["bench"] for r in rows})
+        if failures:
+            for f in failures:
+                print(f"chaos: REGRESSION: {f}", file=sys.stderr)
+            sys.exit(1)
+        print(f"chaos: availability floor check passed ({args.baseline})",
+              file=sys.stderr)
+    print("chaos: beyond-quorum storm survived", file=sys.stderr)

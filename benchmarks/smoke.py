@@ -184,10 +184,19 @@ def run() -> list[dict]:
     dt = (time.perf_counter() - t0) / iters
     rows.append({"bench": "smoke_coding", "backend": "kernel",
                  "coding_mbps": 2 * sum(len(v) for v in vals) / 1e6 / dt})
+
+    # --- chaos family (ISSUE 10): beyond-quorum storm, smallest point ------
+    # Retry machinery armed, EVERY server crashes then recovers; the rows'
+    # availability / stuck / amplification floors are gated below alongside
+    # the full `make bench-chaos` run (same baseline file).
+    from benchmarks.bench_chaos import run as chaos_run
+
+    rows.extend(chaos_run(sessions=16))
     return rows
 
 
-def check_baseline(rows: list[dict], baseline_path) -> list[str]:
+def check_baseline(rows: list[dict], baseline_path,
+                   benches: set[str] | None = None) -> list[str]:
     """Regression gate (ISSUE 4 satellite): compare the smoke rows against
     the checked-in quorum-round baseline. Each baseline metric names a
     ``bench`` (plus optional ``match`` row filters), a row ``field``, the
@@ -200,10 +209,16 @@ def check_baseline(rows: list[dict], baseline_path) -> list[str]:
     with ``"min"``, a value BELOW ``baseline - tolerance`` is the failure
     (e.g. ``coding_mbps`` collapsing back to byte-LUT speed) and a value
     above ``baseline + tolerance`` is the reported improvement. The default
-    ``"max"`` keeps the original round-count semantics."""
+    ``"max"`` keeps the original round-count semantics.
+
+    ``benches`` (ISSUE 10) restricts the gate to metrics naming one of the
+    given bench labels — ``bench_chaos`` shares this baseline file but only
+    produces the chaos rows, so it must not fail the smoke-only metrics."""
     spec = json.loads(Path(baseline_path).read_text())
     failures: list[str] = []
     for m in spec["metrics"]:
+        if benches is not None and m["bench"] not in benches:
+            continue
         want = {"bench": m["bench"], **m.get("match", {})}
         direction = m.get("direction", "max")
         matching = [r for r in rows

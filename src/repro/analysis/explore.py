@@ -47,6 +47,12 @@ Test-only fault hooks (positive controls, satellite of ISSUE 9):
 * ``unguarded-put`` — drops the ``tag > cur`` guard on ``abd-put``: two
   concurrent writers' puts landing out of tag order regress the register,
   which the race tracker reports as an UNORDERED write-write race.
+* ``retry-dup-write`` (ISSUE 10) — applies a *retransmitted* ``abd-put``
+  blindly instead of suppressing the duplicate: with the retry machinery
+  armed, a crash plus a dropped ack force a retransmission whose replay
+  can land after a rival's newer tag and regress the register. The real
+  servers' ``tag > cur`` guard is exactly the suppression this control
+  removes.
 """
 from __future__ import annotations
 
@@ -513,10 +519,42 @@ class _UnguardedPut(_HandlerPatch):
         return self
 
 
+class _RetryDupWrite(_HandlerPatch):
+    """Retry-duplicate write WITHOUT suppression (ISSUE 10 positive
+    control): the first delivery of each distinct ``abd-put`` request runs
+    the honest guarded handler, but a RE-delivery — the deadline machinery's
+    retransmission of the same request after its ack was dropped — is
+    applied blindly, last-write-wins. A schedule where a rival writer's
+    newer tag lands between the original delivery and the retransmitted
+    duplicate regresses the register: exactly the corruption duplicate
+    suppression (tag guards + sid-keyed replies) exists to prevent. Needs
+    ``retry=True`` plus a drop (and a crash to thin the quorum) so a
+    retransmission actually fires."""
+
+    op = "abd-put"
+
+    def __enter__(self) -> "_RetryDupWrite":
+        seen: set = set()
+
+        def patched(srv: Any, sender: str, msg: tuple) -> Any:
+            _, obj, idx, tag, val = msg
+            key = (srv.sid, sender, obj, idx, tag)
+            if key in seen:  # retransmitted duplicate: suppression dropped!
+                srv._abd_state((obj, idx))
+                srv.abd[(obj, idx)] = (tag, val)
+                return ("ack",)
+            seen.add(key)
+            return self._orig(srv, sender, msg)
+
+        self._install(patched)
+        return self
+
+
 FAULTS: dict[str, type[_FaultHook]] = {
     "early-read-resume": _EarlyReadResume,
     "ack-rollback": _AckRollback,
     "unguarded-put": _UnguardedPut,
+    "retry-dup-write": _RetryDupWrite,
 }
 
 
@@ -535,6 +573,10 @@ class ExploreConfig:
     seed: int = 0
     fast_net: bool = True
     fault: str | None = None
+    # arm the ISSUE 10 deadline/retransmit machinery (jitter pinned to 0 so
+    # the retry stream draws nothing and replays stay byte-identical); ops
+    # that exhaust the budget fail typed and count as incomplete.
+    retry: bool = False
     # controller
     width: int = 4
     horizon: float = 1.0e-3
@@ -592,11 +634,15 @@ def run_schedule(
     trace fingerprint; protocol violations land in ``Outcome.violation``
     (schedule divergence and genuine crashes still raise)."""
     from repro.core.store import DSS, DSSParams
+    from repro.net.sim import QuorumUnavailableError, RetryPolicy
 
     params = DSSParams(
         algorithm=cfg.algorithm, n_servers=cfg.n_servers,
         parity_m=cfg.parity_m, delta=cfg.delta, seed=cfg.seed,
         fast_net=cfg.fast_net, sanitize=True, racecheck=True,
+        retry=RetryPolicy(rpc_timeout=5e-3, jitter=0.0, max_attempts=2,
+                          phase_retries=1, phase_backoff=1e-3)
+        if cfg.retry else None,
     )
     dss = DSS(params)
     ctrl = ScheduleController(
@@ -609,17 +655,30 @@ def run_schedule(
     hook = FAULTS[cfg.fault](dss.net, ctrl) if cfg.fault else _FaultHook(dss.net, ctrl)
     violation: dict[str, str] | None = None
     futs: list[Any] = []
+    unavailable: list[str] = []
+
+    def _shield(kind: str, gen: Generator) -> Generator:
+        # a retry budget exhausting mid-exploration is a LIVENESS outcome,
+        # not a safety violation: record it (the op stays out of the strict
+        # reads-from gate) instead of crashing the event loop.
+        try:
+            return (yield from gen)
+        except QuorumUnavailableError:
+            unavailable.append(kind)
+            return None
+
     with hook:
         ops = SCENARIOS[cfg.scenario](dss)
         for cid, kind, gen in ops:
-            futs.append(dss.net.spawn(gen, kind=kind, client=cid))
+            futs.append(dss.net.spawn(_shield(kind, gen), kind=kind, client=cid))
         try:
             dss.net.run(max_events=cfg.max_events)
         except SanitizerError as e:  # includes RaceError / linearize errors
             violation = {"type": type(e).__name__, "message": str(e)}
     incomplete = sum(1 for f in futs if not f.done)
     if violation is None:
-        strict = incomplete == 0 and ctrl.injections == 0
+        strict = (incomplete == 0 and ctrl.injections == 0
+                  and not unavailable and dss.net.op_retries == 0)
         try:
             dss.check_history(strict_reads=strict)
         except SanitizerError as e:
@@ -627,7 +686,9 @@ def run_schedule(
     report = {
         "ops": len(futs),
         "ops_incomplete": incomplete,
+        "ops_unavailable": len(unavailable),
         "injections": ctrl.injections,
+        "retransmits": dss.net.retransmits,
         "sanitizer": dss.net.sanitizer.report(),
         "races": dss.net.race_tracker.report(),
     }
@@ -829,6 +890,12 @@ def _selftest(out_dir: str, budget: int) -> int:
         ("early-read-resume", {"scenario": "wr", "mode": "pct"}),
         ("ack-rollback", {"scenario": "wr", "mode": "pct", "drop_budget": 1}),
         ("unguarded-put", {"scenario": "ww", "mode": "dfs"}),
+        # ISSUE 10: a retransmitted write applied without duplicate
+        # suppression — needs the retry machinery armed plus a crash (thins
+        # the quorum) and a dropped ack (forces the retransmission)
+        ("retry-dup-write", {"scenario": "ww", "mode": "pct",
+                             "crash_budget": 1, "drop_budget": 1,
+                             "retry": True}),
     ]
     ok = True
     for i, (fault, kw) in enumerate(controls):

@@ -17,6 +17,14 @@ from repro.core.server import StorageServer
 from repro.core.store import ALGORITHMS, DSS, ClientHandle, DSSParams
 from repro.core.tags import TAG0, Config, CSeqEntry, OpRecord, Tag, next_tag
 from repro.core.workload import CrashStorm, WorkloadGen, WorkloadSpec
+from repro.net.sim import (
+    DeadlineExceeded,
+    FaultEvent,
+    FaultPlan,
+    QuorumUnavailableError,
+    RetryPolicy,
+    RpcTimeout,
+)
 
 __all__ = [
     "Session",
@@ -51,4 +59,10 @@ __all__ = [
     "decode_block_value",
     "encode_genesis_meta",
     "parse_genesis_meta",
+    "RetryPolicy",
+    "FaultPlan",
+    "FaultEvent",
+    "QuorumUnavailableError",
+    "RpcTimeout",
+    "DeadlineExceeded",
 ]

@@ -42,6 +42,7 @@ from dataclasses import dataclass
 from typing import Any, Generator
 
 from repro.core.tags import Config
+from repro.net.sim import DeadlineExceeded
 
 
 @dataclass
@@ -64,6 +65,11 @@ class OpStats:
     latency: float = 0.0
     blocks: int = 0
     batched_with: int = 1
+    # RPC retransmissions observed network-wide during this op's lifetime
+    # (ISSUE 10). Coarse under concurrency — like rounds/msgs it is an
+    # interval delta, so overlapping ops share amplification — but exact in
+    # the common single-op-probe case and always 0 with retries disabled.
+    retries: int = 0
 
 
 class OpFuture:
@@ -81,10 +87,10 @@ class OpFuture:
         self._result: Any = None
         self._error: BaseException | None = None
 
-    # backstop against spinning forever when the op can never complete but
-    # background traffic (an unbounded repair daemon) keeps the event queue
-    # non-empty — same budget as ``Network.run``.
-    MAX_EVENTS = 50_000_000
+    # virtual-time deadline for ``result()`` when neither the caller nor an
+    # active RetryPolicy (``op_deadline``) supplies one (ISSUE 10 — replaces
+    # the old magic 50M-event budget with a real deadline error).
+    DEFAULT_DEADLINE = 60.0
 
     def done(self) -> bool:
         return self._done
@@ -95,19 +101,32 @@ class OpFuture:
         failures without re-raising through ``result``)."""
         return self._error
 
-    def result(self) -> Any:
+    def result(self, deadline: float | None = None) -> Any:
         """Step the virtual-time network until this operation completes,
-        then return its result (or raise what the operation raised)."""
+        then return its result (or raise what the operation raised).
+
+        ``deadline`` bounds how far VIRTUAL time may advance past the call
+        (default: the active ``RetryPolicy.op_deadline``, else
+        ``DEFAULT_DEADLINE``). A blown deadline — quorum lost with retries
+        disabled, or only background traffic left — raises
+        :class:`DeadlineExceeded` carrying ``Network.stuck_ops()``
+        diagnostics instead of spinning on an event budget."""
         net = self.session.net
-        budget = self.MAX_EVENTS
+        if deadline is None:
+            policy = getattr(net, "retry", None)
+            deadline = policy.op_deadline if policy is not None \
+                else self.DEFAULT_DEADLINE
+        t0 = net.now
         while not self._done and net.step():
-            budget -= 1
-            if budget <= 0:
-                break
+            if net.now - t0 > deadline:
+                raise DeadlineExceeded(
+                    f"{self.kind}({self.fid!r}) missed its {deadline}s "
+                    f"virtual deadline; stuck rounds: {net.stuck_ops()!r}"
+                )
         if not self._done:
-            raise RuntimeError(
-                f"{self.kind}({self.fid!r}) did not terminate "
-                "(quorum lost, or only background traffic remains?)"
+            raise DeadlineExceeded(
+                f"{self.kind}({self.fid!r}): network quiesced without "
+                f"completing it; stuck rounds: {net.stuck_ops()!r}"
             )
         if self._error is not None:
             raise self._error
@@ -227,19 +246,21 @@ class Session:
                       blocks: int | None) -> Generator:
         r0, m0, b0 = self.net.client_totals(self.cid)
         t0 = self.net.now
+        x0 = self.net.retransmits
         try:
             res = yield from op
         except Exception as err:  # noqa: BLE001 - delivered via the future
-            fut._fail(err, self._delta(r0, m0, b0, t0, 0, 1))
+            fut._fail(err, self._delta(r0, m0, b0, t0, 0, 1, x0))
             return None
-        fut._resolve(res, self._delta(r0, m0, b0, t0, blocks or 0, 1))
+        fut._resolve(res, self._delta(r0, m0, b0, t0, blocks or 0, 1, x0))
         return res
 
-    def _delta(self, r0, m0, b0, t0, blocks, width) -> OpStats:
+    def _delta(self, r0, m0, b0, t0, blocks, width, x0=0) -> OpStats:
         r1, m1, b1 = self.net.client_totals(self.cid)
         return OpStats(rounds=r1 - r0, msgs=m1 - m0, bytes=b1 - b0,
                        latency=self.net.now - t0, blocks=blocks,
-                       batched_with=width)
+                       batched_with=width,
+                       retries=self.net.retransmits - x0)
 
     # ------------------------------------------------------- convenience ops
     def write(self, fid: str, content: bytes) -> OpFuture:
@@ -308,19 +329,21 @@ class Session:
             for group in self._groups(batch):
                 r0, m0, b0 = self.net.client_totals(self.cid)
                 t0 = self.net.now
+                x0 = self.net.retransmits
                 try:
                     payload, blocks = yield from _dispatch_group(
                         self.handle, group
                     )
                 except Exception as err:  # noqa: BLE001 - delivered via futures
-                    stats = self._delta(r0, m0, b0, t0, 0, len(group))
+                    stats = self._delta(r0, m0, b0, t0, 0, len(group), x0)
                     for it in group:
                         it.fut._fail(err, stats)
                     continue
                 for it in group:
                     it.fut._resolve(
                         payload[it.fid],
-                        self._delta(r0, m0, b0, t0, blocks[it.fid], len(group)),
+                        self._delta(r0, m0, b0, t0, blocks[it.fid],
+                                    len(group), x0),
                     )
         finally:
             self._drain_scheduled = False

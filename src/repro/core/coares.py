@@ -39,7 +39,44 @@ from typing import Any, Generator, Iterable, Mapping
 
 from repro.core.dap.base import DapClient, make_dap
 from repro.core.tags import TAG0, Config, CSeqEntry, F, OpRecord, P, Tag, digest, next_tag
-from repro.net.sim import RPC, Sleep
+from repro.net.sim import RPC, QuorumUnavailableError, RpcTimeout, Sleep
+
+
+def _with_phase_retry(net, kind: str, factory) -> Generator:
+    """Phase-level retry (ISSUE 10): run ``factory()`` — a fresh generator
+    per attempt — re-issuing the WHOLE operation against the then-current
+    configuration whenever an RPC round times out, and surface a typed
+    :class:`QuorumUnavailableError` (never a hang) once the budget runs dry.
+
+    Re-execution is safe: discover/gather are read-only, and a repeated
+    coverable put re-gathers first, so it either re-covers its own surviving
+    tag (versions match → a fresh higher tag over the same value) or degrades
+    to a read — the per-attempt generator is abandoned mid-flight only at a
+    ``yield``, before its history record is written. Retried runs are flagged
+    on ``net.op_retries`` so the workload harness relaxes the Wing–Gong
+    strict reads-from check (orphan intermediate tags are expected)."""
+    policy = net.retry
+    if policy is None:
+        return (yield from factory())
+    attempts = max(1, policy.phase_retries + 1)
+    last: Exception | None = None
+    for attempt in range(attempts):
+        try:
+            return (yield from factory())
+        except RpcTimeout as err:
+            last = err
+            if attempt + 1 >= attempts:
+                break
+            net.op_retries += 1
+            # linear backoff with seeded jitter from the retry stream (the
+            # RPC tier already did exponential per-attempt backoff; phase
+            # re-issues mostly wait out crash-recovery windows).
+            backoff = policy.phase_backoff * (attempt + 1)
+            backoff *= 1.0 + float(net._retry_rng.random())
+            yield Sleep(backoff)
+    raise QuorumUnavailableError(
+        f"{kind}: no quorum after {attempts} phase attempt(s); last: {last}"
+    ) from last
 
 
 def _register_precode(dap_state: dict, values) -> None:
@@ -309,6 +346,14 @@ class CoAresClient:
 
     # ---------------------------------------------------------------- recon
     def recon_batch(self, objs: Iterable[str], new_config: Config) -> Generator:
+        """ARES reconfiguration (§III), phase-retried — see
+        :meth:`_recon_batch_impl`."""
+        objs = list(dict.fromkeys(objs))  # materialize: retries re-iterate
+        return (yield from _with_phase_retry(
+            self.net, "recon", lambda: self._recon_batch_impl(objs, new_config)
+        ))
+
+    def _recon_batch_impl(self, objs: Iterable[str], new_config: Config) -> Generator:
         """ARES reconfiguration (§III) for many objects: traverse, propose
         (batched consensus), transfer (batched μ..ν sweep + one batched put
         into the decided configuration), finalize — then spawn a background
@@ -414,6 +459,12 @@ class CoAresClient:
 
     # ---------------------------------------------------------------- write
     def cvr_write_batch(self, updates: Mapping[str, Any]) -> Generator:
+        """Alg 1:10-32, phase-retried — see :meth:`_cvr_write_batch_impl`."""
+        return (yield from _with_phase_retry(
+            self.net, "write", lambda: self._cvr_write_batch_impl(updates)
+        ))
+
+    def _cvr_write_batch_impl(self, updates: Mapping[str, Any]) -> Generator:
         """Alg 1:10-32 for many objects in one batched pass — coverable
         writes; each object independently degrades to a read when stale.
         Returns ``{obj: ((tag, val), flag)}``."""
@@ -442,6 +493,13 @@ class CoAresClient:
 
     # ----------------------------------------------------------------- read
     def cvr_read_batch(self, objs: Iterable[str]) -> Generator:
+        """Alg 1:39-55, phase-retried — see :meth:`_cvr_read_batch_impl`."""
+        objs = list(dict.fromkeys(objs))  # materialize: retries re-iterate
+        return (yield from _with_phase_retry(
+            self.net, "read", lambda: self._cvr_read_batch_impl(objs)
+        ))
+
+    def _cvr_read_batch_impl(self, objs: Iterable[str]) -> Generator:
         """Alg 1:39-55 for many objects in one batched pass.
         Returns ``{obj: (tag, val)}``."""
         t0 = self.net.now
@@ -489,6 +547,11 @@ class StaticCoverableClient:
         _register_precode(self.dap_state, values)
 
     def cvr_write_batch(self, updates: Mapping[str, Any]) -> Generator:
+        return (yield from _with_phase_retry(
+            self.net, "write", lambda: self._cvr_write_batch_impl(updates)
+        ))
+
+    def _cvr_write_batch_impl(self, updates: Mapping[str, Any]) -> Generator:
         t0 = self.net.now
         objs = list(updates)
         if not objs:
@@ -512,6 +575,12 @@ class StaticCoverableClient:
         return results[obj]
 
     def cvr_read_batch(self, objs: Iterable[str]) -> Generator:
+        objs = list(dict.fromkeys(objs))  # materialize: retries re-iterate
+        return (yield from _with_phase_retry(
+            self.net, "read", lambda: self._cvr_read_batch_impl(objs)
+        ))
+
+    def _cvr_read_batch_impl(self, objs: Iterable[str]) -> Generator:
         t0 = self.net.now
         objs = list(dict.fromkeys(objs))
         if not objs:

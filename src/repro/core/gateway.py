@@ -154,12 +154,13 @@ class Gateway:
         return groups
 
     def _rider_stats(self, it: _Intent, snaps: dict, t0: float, blocks: int,
-                     width: int) -> OpStats:
+                     width: int, x0: int = 0) -> OpStats:
         r0, m0, b0 = snaps[it.fut.client]
         r1, m1, b1 = self.net.client_totals(it.fut.client)
         return OpStats(rounds=r1 - r0, msgs=m1 - m0, bytes=b1 - b0,
                        latency=self.net.now - t0, blocks=blocks,
-                       batched_with=width)
+                       batched_with=width,
+                       retries=self.net.retransmits - x0)
 
     def _drain(self) -> Generator:
         # same reschedule discipline as the (fixed) Session drain: the flag
@@ -172,6 +173,7 @@ class Gateway:
                 riders = list(dict.fromkeys(it.fut.client for it in group))
                 snaps = {c: self.net.client_totals(c) for c in riders}
                 t0 = self.net.now
+                x0 = self.net.retransmits
                 self.stats["groups"] += 1
                 self.stats["merged"] += len(group)
                 self.stats["dedup_saved"] += len(group) - n_fids
@@ -183,7 +185,8 @@ class Gateway:
                 except Exception as err:  # noqa: BLE001 - delivered via futures
                     for it in group:
                         it.fut._fail(
-                            err, self._rider_stats(it, snaps, t0, 0, len(group))
+                            err,
+                            self._rider_stats(it, snaps, t0, 0, len(group), x0),
                         )
                     continue
                 finally:
@@ -192,7 +195,7 @@ class Gateway:
                     it.fut._resolve(
                         payload[it.fid],
                         self._rider_stats(
-                            it, snaps, t0, blocks[it.fid], len(group)
+                            it, snaps, t0, blocks[it.fid], len(group), x0
                         ),
                     )
         finally:

@@ -145,6 +145,16 @@ class StorageServer(Server):
         self._rcache: dict[tuple, Any] = {}
         self._rkeys: dict[Any, list[tuple]] = {}
 
+    def on_recover(self) -> None:
+        # Crash-recovery (ISSUE 10): the reply/identity cache is volatile —
+        # it memoizes answers computed BEFORE the crash and must not survive
+        # it (a wiped-then-restored replica serving a stale cached reply is
+        # exactly the gray failure the satellite regression test pins).
+        # Durable protocol state (abd/ec/next_c/cons) stays. In-place
+        # ``clear()`` — rebinding the maps would bypass _StateMap tracking.
+        self._rcache.clear()
+        self._rkeys.clear()
+
     def _invalidate(self, obj: Any) -> None:
         keys = self._rkeys.pop(obj, None)
         if keys:

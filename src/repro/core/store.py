@@ -20,7 +20,7 @@ from repro.core.fragment import FragmentationModule
 from repro.core.server import StorageServer
 from repro.core.tags import Config
 from repro.erasure.rs import BACKENDS as CODING_BACKENDS
-from repro.net.sim import LatencyModel, Network
+from repro.net.sim import LatencyModel, Network, RetryPolicy
 
 ALGORITHMS = {
     # name: (reconfigurable, dap, fragmented)
@@ -70,6 +70,12 @@ class DSSParams:
     # the run on a conflicting unordered regression. Also enabled by
     # REPRO_RACECHECK=1. Pure observer like the sanitizer.
     racecheck: bool = False
+    # ISSUE 10 — failure-survival layer: per-RPC deadlines with retransmit /
+    # backoff / optional hedging at the network tier, plus phase-level retry
+    # in the protocol tier surfacing QuorumUnavailableError when the budget
+    # is exhausted. None (default) disables it all — traces bit-identical to
+    # a build without the feature (the ablation the acceptance criteria pin).
+    retry: RetryPolicy | None = None
     latency: LatencyModel = dc_field(default_factory=LatencyModel)
 
 
@@ -262,6 +268,7 @@ class DSS:
         # ambient store-wide coding backend: every RSCode built against this
         # network (DAPs, repair controllers/daemons, recon transfers) reads it
         self.net.coding_backend = p.coding_backend
+        self.net.retry = p.retry
         self.history: list = []
         sids = tuple(f"s{i}" for i in range(p.n_servers))
         for s in sids:
@@ -367,11 +374,15 @@ class DSS:
         for s in ids:
             self.net.crash(s)
 
-    def recover_servers(self, ids: list[str]) -> None:
-        """Crash-recovery: the server rejoins with whatever List state it had
-        when it crashed — i.e. stale. Run ``repair`` to restore redundancy."""
+    def recover_servers(self, ids: list[str], wipe: bool = True) -> None:
+        """Crash-recovery: the server rejoins with whatever durable List
+        state it had when it crashed — i.e. stale; run ``repair`` to restore
+        redundancy. ``wipe=True`` (ISSUE 10) also clears volatile state —
+        the per-server reply/identity cache — so a recovered replica never
+        serves an answer memoized before the crash; ``wipe=False`` keeps the
+        legacy flag-flip behavior."""
         for s in ids:
-            self.net.recover(s)
+            self.net.recover(s, wipe=wipe)
 
     def wipe_servers(self, ids: list[str]) -> None:
         """Disk-loss recovery: drop all EC fragment state (the ABD register

@@ -31,13 +31,21 @@ from repro.core.api import Session
 class CrashStorm:
     """Crash a slice of the server fleet at virtual time ``at`` (seconds
     after the workload's sessions start arriving), recover it ``duration``
-    later. The crash count is capped at ``n - quorum`` live-tolerable
-    failures so the storm degrades service without wedging every quorum —
-    the churn-during-recon scenario ROADMAP 5a asks for, not a blackout."""
+    later. By default the crash count is capped at ``n - quorum``
+    live-tolerable failures so the storm degrades service without wedging
+    every quorum — the churn-during-recon scenario ROADMAP 5a asks for, not
+    a blackout. ``beyond_quorum=True`` (ISSUE 10) lifts the cap: with a
+    ``DSSParams.retry`` policy armed, ops ride out the outage via
+    deadline/retransmit and complete after recovery (or fail typed with
+    ``QuorumUnavailableError``) — never hang. ``wipe`` selects
+    crash-recovery (volatile caches cleared on rejoin) vs the legacy
+    flag-flip."""
 
     at: float
-    frac: float = 0.25          # fraction of servers to crash (capped)
+    frac: float = 0.25          # fraction of servers to crash
     duration: float = 0.05      # virtual seconds until recovery
+    beyond_quorum: bool = False  # lift the n - quorum crash cap
+    wipe: bool = True           # crash-recovery: wipe volatile state on rejoin
 
 
 @dataclass
@@ -110,10 +118,13 @@ class WorkloadGen:
             (s for s in dss.net.servers if s.startswith("s")),
             key=lambda s: int(s[1:]),
         )[: dss.params.n_servers]
-        tolerable = max(0, len(sids) - dss.c0.quorum())
         out = []
         rng = np.random.default_rng([self.seed, 0x570])
         for storm in self.spec.storms:
+            tolerable = (
+                len(sids) if storm.beyond_quorum
+                else max(0, len(sids) - dss.c0.quorum())
+            )
             want = int(round(storm.frac * len(sids)))
             count = min(max(want, 1), tolerable)
             picks = sorted(rng.choice(len(sids), size=count, replace=False).tolist())
@@ -143,6 +154,7 @@ class WorkloadGen:
             kw["window"] = window
         base = net.now
         futures: list = []
+        issue_times: list[float] = []  # per-future issue offset from base
 
         def launch(s: int) -> None:
             sess = Session(dss, f"u{s}", **kw)
@@ -155,6 +167,7 @@ class WorkloadGen:
                 pay = None if read else payloads[i % len(payloads)]
 
                 def issue(sess=sess, fname=fname, read=read, pay=pay) -> None:
+                    issue_times.append(net.now - base)
                     futures.append(
                         sess.read(fname) if read else sess.write(fname, pay)
                     )
@@ -173,7 +186,8 @@ class WorkloadGen:
             net.schedule(storm.at, lambda ids=crash_ids: dss.crash_servers(ids))
             net.schedule(
                 storm.at + storm.duration,
-                lambda ids=crash_ids: dss.recover_servers(ids),
+                lambda ids=crash_ids, w=storm.wipe:
+                    dss.recover_servers(ids, wipe=w),
             )
         net.run()
 
@@ -182,18 +196,55 @@ class WorkloadGen:
         ops_failed = sum(
             1 for f in futures if f.done() and f.exception() is not None
         )
+        ops_ok = ops_done - ops_failed
+        makespan = float(net.now - base)
+        from repro.net.sim import QuorumUnavailableError
+
         report: dict[str, Any] = {
             "sessions": spec.sessions,
             "ops": ops,
             "ops_done": ops_done,
             "ops_failed": ops_failed,
             "ops_stuck": ops - ops_done,
-            "virtual_makespan": float(net.now - base),
+            "virtual_makespan": makespan,
             "rpc_rounds": net.rpc_rounds,
             "msg_count": net.msg_count,
             "bytes_sent": net.bytes_sent,
             "events": net.events_processed,
+            # availability/goodput as first-class metrics (ISSUE 10): the
+            # fraction of issued ops that completed successfully, and the
+            # successful-op rate over the virtual makespan.
+            "availability": ops_ok / ops if ops else 1.0,
+            "goodput_ops_per_s": ops_ok / makespan if makespan > 0 else 0.0,
+            # failure typing: with retries on, EVERY failure must be the
+            # typed liveness error, never a hang or a stray exception.
+            "quorum_unavailable": sum(
+                1 for f in futures
+                if f.done() and isinstance(f.exception(), QuorumUnavailableError)
+            ),
+            "stuck_rpcs": len(net.stuck_ops()),
+            "retries": {
+                "retransmits": net.retransmits,
+                "rpc_timeouts": net.rpc_timeouts,
+                "hedges": net.hedges,
+                "op_retries": net.op_retries,
+            },
         }
+        if self.spec.storms:
+            # post-recovery availability: ops issued after the LAST storm's
+            # recovery point must essentially all succeed (the ≥99% gate the
+            # chaos bench holds CI to).
+            recovery_end = max(s.at + s.duration for s in self.spec.storms)
+            after = [
+                f for f, t in zip(futures, issue_times) if t >= recovery_end
+            ]
+            ok_after = sum(
+                1 for f in after if f.done() and f.exception() is None
+            )
+            report["ops_after_recovery"] = len(after)
+            report["availability_after_recovery"] = (
+                ok_after / len(after) if after else 1.0
+            )
         if getattr(net, "sanitizer", None) is not None:
             # sanitized run (ISSUE 8): every fan-out/reply was checked live;
             # close with the post-hoc Wing–Gong pass over the recorded
@@ -202,7 +253,13 @@ class WorkloadGen:
             # reads may legitimately observe.
             from repro.analysis.linearize import check_tag_linearizable
 
-            strict = ops_failed == 0 and ops - ops_done == 0
+            # phase retries leave orphan intermediate tags (an abandoned
+            # attempt's put may land without its history record), so strict
+            # reads-from is only provable on retry-free runs.
+            strict = (
+                ops_failed == 0 and ops - ops_done == 0
+                and net.op_retries == 0
+            )
             lin = check_tag_linearizable(dss.history, strict_reads=strict)
             report["sanitizer"] = dict(net.sanitizer.report(), **{
                 "linearized_objects": lin["objects"],

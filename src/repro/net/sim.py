@@ -149,6 +149,12 @@ class LatencyModel:
     base_hi: float = 0.8e-3
     bandwidth: float = 125e6         # bytes/s (1 Gbit/s)
     drop_prob: float = 0.0
+    # duplicate delivery (ISSUE 10): with probability ``dup_prob`` a request
+    # message arrives TWICE — the handler runs again on the same payload
+    # (at-least-once delivery), the duplicate's wire bytes are charged, and
+    # its reply is discarded client-side. Draws come from a dedicated
+    # ``_dup_rng`` stream only when > 0, so the default consumes nothing.
+    dup_prob: float = 0.0
     server_compute: float = 20e-6    # per-message server handling (s)
     # client-side compute models (per byte, s):
     enc_per_byte: float = 0.6e-9     # RS encode  (§VI: encode faster ...)
@@ -163,6 +169,106 @@ class LatencyModel:
 
     def msg_delay(self, rng: np.random.Generator, size: int) -> float:
         return float(rng.uniform(self.base_lo, self.base_hi)) + size / self.bandwidth
+
+
+class QuorumUnavailableError(RuntimeError):
+    """Typed liveness failure (ISSUE 10): an operation could not assemble a
+    quorum within its retry budget. Safety is unaffected — the op performed
+    no externally visible partial effect a retry would not have been allowed
+    to repeat — but the service was UNAVAILABLE for this op. Protocol phase
+    wrappers raise this after exhausting ``RetryPolicy.phase_retries``."""
+
+
+class RpcTimeout(QuorumUnavailableError):
+    """One RPC round missed its per-attempt deadline chain: ``need`` distinct
+    replies never arrived within ``RetryPolicy.max_attempts`` retransmissions.
+    Thrown INTO the op generator at the pending ``yield RPC`` so protocol
+    code can catch it and re-issue the phase against the current config."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """``OpFuture.result(deadline=...)``: the op did not complete within the
+    virtual-time deadline (or the network quiesced with the op still pending
+    — a lost quorum with retries disabled). Carries ``Network.stuck_ops()``
+    diagnostics in the message."""
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Failure-survival knobs (ISSUE 10), plumbed via ``DSSParams.retry``.
+
+    ``None`` (the default everywhere) disables the whole machinery: no RNG
+    stream is consumed, no timer events are scheduled, no sequence numbers
+    are reserved — traces are bit-identical to a build without the feature.
+
+    With a policy set, every quorum-mode RPC round arms a deterministic
+    virtual-time deadline timer: on expiry the round retransmits to the
+    destinations that have not replied (handlers are idempotent / guarded,
+    and client-side replies are keyed by server id, so duplicates cannot
+    double-count toward the quorum), with exponential backoff and seeded
+    jitter from the dedicated ``_retry_rng`` stream. After ``max_attempts``
+    the round throws :class:`RpcTimeout` into the op generator; the protocol
+    tier retries whole phases ``phase_retries`` times against the current
+    configuration before surfacing :class:`QuorumUnavailableError`."""
+
+    rpc_timeout: float = 10e-3       # attempt 1 deadline (virtual s)
+    backoff: float = 2.0             # per-attempt timeout multiplier
+    jitter: float = 0.25             # timeout *= 1 + jitter*U[0,1) when > 0
+    max_attempts: int = 4            # send attempts per RPC round
+    # hedged duplicate send (tail-latency): ``hedge_after`` virtual seconds
+    # into attempt 1, re-send to the laggards WITHOUT burning an attempt.
+    hedge_after: float | None = None
+    phase_retries: int = 2           # protocol-phase re-issues on RpcTimeout
+    phase_backoff: float = 5e-3      # base phase backoff (linear x attempt)
+    op_deadline: float = 60.0        # OpFuture.result default deadline
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault: ``kind`` in crash | recover | partition | heal |
+    heal-all | slow | unslow. ``peer`` is the partition/heal destination
+    endpoint, ``extra`` the gray-failure added latency (s), ``wipe`` the
+    crash-recovery volatile-state wipe flag."""
+
+    at: float
+    kind: str
+    target: str = ""
+    peer: str = ""
+    extra: float = 0.0
+    wipe: bool = True
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Declarative fault schedule (ISSUE 10): crash-stop, crash-recovery,
+    asymmetric link partitions and gray failures as timed events, applied
+    relative to ``net.now`` at :meth:`apply` time. Deterministic — no RNG."""
+
+    events: tuple = ()
+
+    def apply(self, net: "Network") -> None:
+        for ev in self.events:
+            net.schedule(ev.at, partial(self._fire, net, ev))
+
+    @staticmethod
+    def _fire(net: "Network", ev: FaultEvent) -> None:
+        kind = ev.kind
+        if kind == "crash":
+            net.crash(ev.target)
+        elif kind == "recover":
+            net.recover(ev.target, wipe=ev.wipe)
+        elif kind == "partition":
+            net.partition(ev.target, ev.peer)
+        elif kind == "heal":
+            net.heal(ev.target, ev.peer)
+        elif kind == "heal-all":
+            net.heal()
+        elif kind == "slow":
+            net.slow(ev.target, ev.extra)
+        elif kind == "unslow":
+            net.unslow(ev.target)
+        else:
+            raise ValueError(f"unknown fault kind {kind!r}")
 
 
 @dataclass
@@ -235,6 +341,11 @@ class Server:
     def handle(self, sender: str, msg: Any) -> Any:  # pragma: no cover
         raise NotImplementedError
 
+    def on_recover(self) -> None:
+        """Crash-recovery hook (ISSUE 10): wipe volatile state that must not
+        survive a crash (reply/identity caches, in-flight handler scratch).
+        Durable protocol state (tags, blocks, configs) stays. Base: no-op."""
+
 
 class _RpcState:
     """Shared per-RPC bookkeeping for both send paths: reply collection,
@@ -243,6 +354,7 @@ class _RpcState:
     __slots__ = (
         "net", "gen", "fut", "on_done", "acct", "src_i",
         "need", "alive", "counted", "replies", "resumed",
+        "rpc", "attempt", "hedged",
     )
 
     def __init__(self, net, gen, fut, on_done, acct, src_i, need, alive, counted):
@@ -259,6 +371,18 @@ class _RpcState:
         self.counted = counted
         self.replies: dict[str, Any] = {}
         self.resumed = False
+        # retry machinery (ISSUE 10): set by _run_rpc only when a RetryPolicy
+        # is active and the round is quorum-mode. ``attempt == 0`` means no
+        # timer was armed (feature off / alive mode) — deadline callbacks
+        # check the attempt generation, so stale timers are no-ops.
+        self.rpc = None
+        self.attempt = 0
+        self.hedged = False
+
+    def _resume(self, payload) -> None:
+        self.resumed = True
+        self.net._waiting.pop(id(self), None)
+        self.net._step(self.gen, self.fut, payload, self.on_done)
 
     def deliver(self, sid: str, reply: Any) -> None:
         net = self.net
@@ -275,10 +399,12 @@ class _RpcState:
         rt = net.race_tracker
         if rt is not None:
             rt.on_reply(sid, self)
+        # keyed by server id: a retransmission's duplicate reply OVERWRITES
+        # the original instead of double-counting toward the quorum (ISSUE 10
+        # duplicate suppression — ``len(replies)`` counts distinct servers).
         self.replies[sid] = reply
         if len(self.replies) >= self.need:
-            self.resumed = True
-            self.net._step(self.gen, self.fut, dict(self.replies), self.on_done)
+            self._resume(dict(self.replies))
 
     def abandon(self, sid: str) -> None:
         """A destination counted into an ``"alive"`` need can no longer
@@ -287,13 +413,11 @@ class _RpcState:
             return
         self.need -= 1
         if len(self.replies) >= self.need:
-            self.resumed = True
-            self.net._step(self.gen, self.fut, dict(self.replies), self.on_done)
+            self._resume(dict(self.replies))
 
     def resume_empty(self) -> None:
         if not self.resumed:
-            self.resumed = True
-            self.net._step(self.gen, self.fut, {}, self.on_done)
+            self._resume({})
 
 
 class _FanOut:
@@ -311,11 +435,11 @@ class _FanOut:
 
     __slots__ = (
         "net", "state", "sids", "srvs", "msgs", "shared_msg", "didx",
-        "rprops", "rdrop", "arr", "order", "seq0", "pos", "nd",
+        "rprops", "rdrop", "dups", "arr", "order", "seq0", "pos", "nd",
     )
 
     def __init__(self, net, state, sids, srvs, msgs, shared_msg, didx,
-                 rprops, rdrop, arr, order, seq0):
+                 rprops, rdrop, dups, arr, order, seq0):
         self.net = net
         self.state = state
         self.sids = sids
@@ -325,6 +449,7 @@ class _FanOut:
         self.didx = didx            # interned dest endpoint ids
         self.rprops = rprops        # reply propagation draws (pooled)
         self.rdrop = rdrop          # reply drop flags, or None when p == 0
+        self.dups = dups            # duplicate-delivery flags, or None
         self.arr = arr              # arrival times, destination order
         self.order = order          # arrival processing order (stable sort)
         self.seq0 = seq0
@@ -402,6 +527,17 @@ class _FanOut:
             reply = srv.handle(state.fut.client, msg)
         if rt is not None:
             rt.after_handle(sid)
+        if self.dups is not None and self.dups[j]:
+            # at-least-once delivery (dup_prob): the SAME request frame
+            # arrives twice, so the handler runs again on it; the duplicate's
+            # reply is discarded client-side (its request bytes were charged
+            # at send time). Idempotent handlers make this a no-op; buggy
+            # ones corrupt state right here — visible to the race tracker.
+            if rt is not None:
+                rt.before_handle(sid, state)
+            srv.handle(state.fut.client, msg)
+            if rt is not None:
+                rt.after_handle(sid)
         if reply is None:
             state.abandon(sid)
             return
@@ -411,16 +547,22 @@ class _FanOut:
         net.msg_count += 1
         net.bytes_sent += rsize
         net._acct_add(state.acct, 0, 1, rsize)
+        client = state.fut.client
         deliver = self.rdrop is None or not self.rdrop[j]
+        if deliver and net._partitions and net._blocked(sid, client):
+            deliver = False  # reply direction of an asymmetric partition
         rdelay = net.latency.server_compute + net._transmit_prop(
             self.didx[j], state.src_i, rsize, self.rprops[j], deliver
         )
         if not deliver:
             state.abandon(sid)
             return
+        gray = net._gray
+        if gray:
+            rdelay += gray.get(sid, 0.0) + gray.get(client, 0.0)
         net.schedule(
             rdelay, partial(state.deliver, sid, reply),
-            ("rpl", None, state.fut.client),
+            ("rpl", None, client),
         )
 
 
@@ -433,6 +575,33 @@ class Network:
         # (ISSUE 7 — the old path burned one rng.random() per message even
         # with drops disabled).
         self._drop_rng = np.random.default_rng([int(seed), 0x5EED])
+        # ISSUE 10 streams, same discipline as _drop_rng: constructed eagerly
+        # (construction draws nothing) but consumed ONLY when the feature is
+        # on, so the disabled ablation stays bit-identical. _retry_rng feeds
+        # backoff jitter; _dup_rng feeds dup_prob duplicate-delivery flags.
+        self._retry_rng = np.random.default_rng([int(seed), 0x7E7])
+        self._dup_rng = np.random.default_rng([int(seed), 0xD0B])
+        # active retry policy; DSS.__init__ copies DSSParams.retry here.
+        # None (default) = timers/retransmits/hedges fully disabled.
+        self.retry: RetryPolicy | None = None
+        # asymmetric link partitions: set of (src, dst) directed pairs, "*"
+        # wildcard on either side. Outbound messages are silently lost at
+        # send time, replies at handle time — both at the same virtual
+        # timestamps on either engine. Empty set = zero-cost checks.
+        self._partitions: set = set()
+        # gray failures: endpoint -> extra one-way propagation latency (s),
+        # added deterministically (no RNG) to every message the endpoint
+        # sends or receives while set.
+        self._gray: dict[str, float] = {}
+        # in-flight quorum bookkeeping for stuck_ops() diagnostics: every
+        # un-resumed _RpcState, keyed by id. Pure bookkeeping — no events.
+        self._waiting: dict = {}
+        self.retransmits = 0
+        self.hedges = 0
+        self.rpc_timeouts = 0
+        # protocol-phase re-issues (coares retry wrapper bumps this); the
+        # workload harness gates Wing–Gong strict reads-from on it staying 0.
+        self.op_retries = 0
         self.latency = latency or LatencyModel()
         # fast=True (default): vectorised one-event-per-fan-out engine.
         # fast=False: the seed implementation's per-destination closures —
@@ -525,11 +694,69 @@ class Network:
     def crash(self, sid: str) -> None:
         self.servers[sid].crashed = True
 
-    def recover(self, sid: str) -> None:
-        self.servers[sid].crashed = False
+    def recover(self, sid: str, wipe: bool = True) -> None:
+        """Bring a crashed server back. ``wipe=True`` (crash-recovery, ISSUE
+        10) invokes :meth:`Server.on_recover` so volatile state — reply /
+        identity caches, handler scratch — does not survive the crash;
+        ``wipe=False`` is the legacy flag-flip (server resumes with whatever
+        it had, caches included)."""
+        srv = self.servers[sid]
+        srv.crashed = False
+        if wipe:
+            srv.on_recover()
 
     def alive(self) -> list[str]:
         return [s for s, srv in self.servers.items() if not srv.crashed]
+
+    # -- fault surface (ISSUE 10) ---------------------------------------------
+    def partition(self, src: str, dst: str, *, bidir: bool = False) -> None:
+        """Block messages src -> dst (asymmetric by default). ``"*"`` on
+        either side is a wildcard. Partitioned messages are lost silently —
+        no drop-RNG draws, so traces without partitions are unperturbed."""
+        self._partitions.add((src, dst))
+        if bidir:
+            self._partitions.add((dst, src))
+
+    def heal(self, src: str | None = None, dst: str | None = None,
+             *, bidir: bool = False) -> None:
+        """Remove one directed partition (or, with no arguments, all)."""
+        if src is None and dst is None:
+            self._partitions.clear()
+            return
+        self._partitions.discard((src, dst))
+        if bidir:
+            self._partitions.discard((dst, src))
+
+    def _blocked(self, src: str, dst: str) -> bool:
+        p = self._partitions
+        return (src, dst) in p or (src, "*") in p or ("*", dst) in p
+
+    def slow(self, endpoint: str, extra: float) -> None:
+        """Gray failure: add ``extra`` seconds of one-way latency to every
+        message ``endpoint`` sends or receives, until :meth:`unslow`."""
+        self._gray[endpoint] = float(extra)
+
+    def unslow(self, endpoint: str) -> None:
+        self._gray.pop(endpoint, None)
+
+    def stuck_ops(self) -> list[dict]:
+        """Diagnostics for the forever-pending-future leak (ISSUE 10
+        satellite): every quorum/alive round still waiting for replies.
+        Non-empty after the event queue drains means an op is stranded."""
+        out = []
+        for state in self._waiting.values():
+            if state.resumed:
+                continue
+            fut = state.fut
+            out.append({
+                "op_id": fut.op_id,
+                "kind": fut.kind,
+                "client": fut.client,
+                "need": state.need,
+                "have": sorted(state.replies),
+                "alive_mode": state.alive,
+            })
+        return out
 
     # -- event loop ------------------------------------------------------------
     def schedule(
@@ -765,12 +992,19 @@ class Network:
         fut: OpFuture,
         send_value: Any,
         on_done: Callable[[OpFuture], None] | None,
+        exc: BaseException | None = None,
     ) -> None:
         prof = self.profile_protocol
         if prof:
             t0 = perf_counter()
         try:
-            effect = gen.send(send_value)
+            # ``exc`` (ISSUE 10): a typed failure — RpcTimeout from the
+            # deadline machinery — is THROWN into the generator at its
+            # pending ``yield RPC``. Protocol phase wrappers catch it and
+            # yield again (backoff Sleep, then a fresh attempt); the Session
+            # tier's _instrumented wrapper catches whatever escapes and fails
+            # the OpFuture typed instead of letting it crash the event loop.
+            effect = gen.throw(exc) if exc is not None else gen.send(send_value)
         except StopIteration as stop:
             if prof:
                 self.protocol_time += perf_counter() - t0
@@ -854,6 +1088,10 @@ class Network:
         rt = self.race_tracker
         if rt is not None:
             rt.on_issue(state, rpc)
+        # stuck-op bookkeeping (ISSUE 10): every round registers here and
+        # deregisters on resume; whatever remains after the queue drains is a
+        # stranded op — see stuck_ops(). Dict insert/pop only, no events.
+        self._waiting[id(state)] = state
         send = self._fast_send if self.fast_rpc else self._legacy_send
         # "snd" events draw pooled RNG and touch shared NIC state: the
         # controller treats them as conflicting with everything.
@@ -865,6 +1103,84 @@ class Network:
             # straggler reply re-resuming the generator).
             self.schedule(rpc.pre_delay, state.resume_empty,
                           ("cli", None, fut.client))
+            return
+        policy = self.retry
+        if policy is not None and not alive_mode:
+            # arm the per-attempt deadline chain. Quorum mode only: alive
+            # mode structurally cannot hang (crashes/drops shrink ``need``),
+            # and its rounds are fire-and-mostly-forget daemon traffic.
+            state.rpc = rpc
+            state.attempt = 1
+            self._arm_timer(state, policy, rpc.pre_delay)
+
+    # -- retry / deadline machinery (ISSUE 10) --------------------------------
+    def _arm_timer(self, state: _RpcState, policy: RetryPolicy,
+                   extra: float) -> None:
+        att = state.attempt
+        timeout = policy.rpc_timeout * (policy.backoff ** (att - 1))
+        if policy.jitter > 0.0:
+            # seeded jitter from the dedicated stream: deterministic, and
+            # drawn only when a policy is armed (ablation draws nothing).
+            timeout *= 1.0 + policy.jitter * float(self._retry_rng.random())
+        self.schedule(extra + timeout, partial(self._rpc_deadline, state, att),
+                      ("cli", None, state.fut.client))
+        if att == 1 and policy.hedge_after is not None:
+            self.schedule(extra + policy.hedge_after,
+                          partial(self._rpc_hedge, state),
+                          ("cli", None, state.fut.client))
+
+    def _rpc_deadline(self, state: _RpcState, att: int) -> None:
+        # stale-timer guard: the round resumed, or a retransmission already
+        # superseded this attempt generation — this timer is a no-op.
+        if state.resumed or state.attempt != att:
+            return
+        policy = self.retry
+        if policy is None or att >= policy.max_attempts:
+            self.rpc_timeouts += 1
+            self._waiting.pop(id(state), None)
+            state.resumed = True
+            fut = state.fut
+            missing = [s for s in state.rpc.dests if s not in state.replies]
+            err = RpcTimeout(
+                f"{fut.kind or 'op'}({fut.client}): {len(state.replies)}/"
+                f"{state.need} replies after {att} attempt(s); "
+                f"no reply from {missing}"
+            )
+            self._step(state.gen, fut, None, state.on_done, exc=err)
+            return
+        state.attempt = att + 1
+        self.retransmits += 1
+        self._resend(state)
+        self._arm_timer(state, policy, 0.0)
+
+    def _rpc_hedge(self, state: _RpcState) -> None:
+        # hedged duplicate send: still in attempt 1, not yet resumed, fire
+        # once — re-send to the laggards without burning a retry attempt.
+        if state.resumed or state.attempt != 1 or state.hedged:
+            return
+        state.hedged = True
+        self.hedges += 1
+        self._resend(state)
+
+    def _resend(self, state: _RpcState) -> None:
+        """Idempotent retransmission: re-send the ORIGINAL payload to the
+        destinations that have not replied. Replies are keyed by server id
+        client-side and handlers are guarded server-side, so a duplicate
+        cannot double-count a quorum or regress protocol state."""
+        rpc = state.rpc
+        missing = tuple(s for s in rpc.dests if s not in state.replies)
+        if not missing:
+            return
+        per = None if rpc.per_dest is None else {
+            s: rpc.per_dest[s] for s in missing
+        }
+        dup = RPC(dests=missing, msg=rpc.msg, need=state.need, per_dest=per)
+        send = self._fast_send if self.fast_rpc else self._legacy_send
+        # same _RpcState: no new sanitizer round, no rpc_rounds bump — this
+        # is wire-level amplification of the SAME protocol round (it shows
+        # up in msg_count/bytes_sent and the retransmits counter).
+        self.schedule(0.0, partial(send, dup, state),
+                      ("snd", None, state.fut.client))
 
     # Both send paths share one canonical RNG schedule per fan-out over the B
     # destinations that exist: 2B latency props from ``rng`` (outbound then
@@ -920,6 +1236,33 @@ class Network:
         props = self.rng.uniform(lat.base_lo, lat.base_hi, 2 * B).tolist()
         p = lat.drop_prob
         flags = (self._drop_rng.random(2 * B) < p).tolist() if p > 0.0 else None
+        dp = lat.dup_prob
+        dups = (self._dup_rng.random(B) < dp).tolist() if dp > 0.0 else None
+        client_ep = state.fut.client
+        # gray failures (deterministic, no draws): pad the outbound
+        # propagation samples; the reply direction pads rdelay in _process.
+        gray = self._gray
+        if gray:
+            gc = gray.get(client_ep, 0.0)
+            for j in range(B):
+                g = gc + gray.get(sids[j], 0.0)
+                if g:
+                    props[j] += g
+        # outbound loss = drop-RNG flag OR asymmetric partition block. The
+        # merged ``lost`` view drives filtering; ``flags`` keeps feeding the
+        # reply-drop half so the canonical draw layout never changes.
+        if self._partitions:
+            blk = [self._blocked(client_ep, s) for s in sids]
+            if True not in blk:
+                blk = None
+        else:
+            blk = None
+        if blk is None:
+            lost = flags  # 2B when drops on (first half read), else None
+        elif flags is None:
+            lost = blk
+        else:
+            lost = [flags[j] or blk[j] for j in range(B)]
         now = self.now
         bw = lat.bandwidth
         serialize = lat.serialize_links
@@ -934,8 +1277,8 @@ class Network:
             if now > busy:
                 busy = now
         arr: list[float] = []
-        if flags is None:
-            # no drops (the common case): every message is delivered, so the
+        if lost is None:
+            # no losses (the common case): every message is delivered, so the
             # destination views ARE the originals — only arrivals to compute
             for j in range(B):
                 tx = (shared if sizes is None else sizes[j]) / bw
@@ -955,20 +1298,22 @@ class Network:
             d_sids, d_srvs, d_msgs, d_didx = sids, srvs, msgs, didx
             d_rprops = props[B:]
             d_rdrop = None
+            d_dups = dups
         else:
-            # delivered arrivals (outbound drops still consume the uplink)
+            # delivered arrivals (outbound losses still consume the uplink)
             d_sids = []
             d_srvs = []
             d_msgs = None if msgs is None else []
             d_didx = []
             d_rprops = []
-            d_rdrop = []
+            d_rdrop = None if flags is None else []
+            d_dups = None if dups is None else []
             for j in range(B):
                 tx = (shared if sizes is None else sizes[j]) / bw
                 if serialize:
                     t_send = busy
                     busy = t_send + tx
-                if flags[j]:
+                if lost[j]:
                     continue
                 if serialize:
                     t0 = t_send + props[j]
@@ -987,12 +1332,29 @@ class Network:
                     d_msgs.append(msgs[j])
                 d_didx.append(didx[j])
                 d_rprops.append(props[B + j])
-                d_rdrop.append(flags[B + j])
+                if d_rdrop is not None:
+                    d_rdrop.append(flags[B + j])
+                if d_dups is not None:
+                    d_dups.append(dups[j])
         if serialize:
             bo[src_i] = busy
+        # duplicated request frames (dup_prob): the extra copy of each
+        # delivered, dup-flagged message is charged on the wire here; the
+        # handler re-runs at arrival time and its reply is discarded.
+        if dups is not None:
+            ndup = 0
+            dbytes = 0
+            for j in range(B):
+                if dups[j] and (lost is None or not lost[j]):
+                    ndup += 1
+                    dbytes += shared if sizes is None else sizes[j]
+            if ndup:
+                self.msg_count += ndup
+                self.bytes_sent += dbytes
+                self._acct_add(state.acct, 0, ndup, dbytes)
         nd = len(arr)
         if nd == 0:
-            self._abandon_drops(state, sids, flags)
+            self._abandon_drops(state, sids, lost)
             return
         # reserve the arrival sequence numbers the legacy path would have
         # consumed (contiguous, destination order) and enter the heap at the
@@ -1008,20 +1370,20 @@ class Network:
         fan = _FanOut(
             self, state, d_sids, d_srvs, d_msgs,
             rpc.msg if msgs is None else None,
-            d_didx, d_rprops, d_rdrop, arr, order, seq0,
+            d_didx, d_rprops, d_rdrop, d_dups, arr, order, seq0,
         )
         j0 = order[0]
         heapq.heappush(self._events, (arr[j0], seq0 + j0, fan.fire))
-        self._abandon_drops(state, sids, flags)
+        self._abandon_drops(state, sids, lost)
 
-    def _abandon_drops(self, state: _RpcState, sids: list[str], flags) -> None:
-        """alive-mode bookkeeping for outbound drops (after arrival seqs are
-        reserved, so resume-triggered schedules order identically on both
-        paths)."""
-        if flags is None or not state.alive:
+    def _abandon_drops(self, state: _RpcState, sids: list[str], lost) -> None:
+        """alive-mode bookkeeping for outbound losses — drops or partition
+        blocks (after arrival seqs are reserved, so resume-triggered
+        schedules order identically on both paths)."""
+        if lost is None or not state.alive:
             return
         for j, sid in enumerate(sids):
-            if flags[j]:
+            if lost[j]:
                 state.abandon(sid)
 
     def _legacy_send(self, rpc: RPC, state: _RpcState) -> None:
@@ -1049,9 +1411,16 @@ class Network:
             rdrop = [bool(self._drop_rng.random() < p) for _ in range(B)]
         else:
             odrop = rdrop = None
+        dp = lat.dup_prob
+        if dp > 0.0:
+            dup = [bool(self._dup_rng.random() < dp) for _ in range(B)]
+        else:
+            dup = None
         shared = msg_wire_size(rpc.msg) if rpc.per_dest is None else None
         client = state.fut.client
         src_i = state.src_i
+        gray = self._gray
+        parted = bool(self._partitions)
         dropped_sids: list[str] = []
         for j, (sid, srv) in enumerate(pairs):
             msg = rpc.msg if rpc.per_dest is None else rpc.per_dest[sid]
@@ -1059,13 +1428,22 @@ class Network:
             self.msg_count += 1
             self.bytes_sent += size
             self._acct_add(state.acct, 0, 1, size)
-            lost = odrop is not None and odrop[j]
+            lost = (odrop is not None and odrop[j]) or (
+                parted and self._blocked(client, sid)
+            )
+            oprop = oprops[j]
+            if gray:
+                oprop += gray.get(client, 0.0) + gray.get(sid, 0.0)
             delay = self._transmit_prop(
-                src_i, self._intern(sid), size, oprops[j], not lost
+                src_i, self._intern(sid), size, oprop, not lost
             )
             if lost:
                 dropped_sids.append(sid)
                 continue
+            if dup is not None and dup[j]:
+                self.msg_count += 1
+                self.bytes_sent += size
+                self._acct_add(state.acct, 0, 1, size)
 
             def arrive(
                 srv=srv,
@@ -1073,6 +1451,7 @@ class Network:
                 msg=msg,
                 rprop=rprops[j],
                 rlost=rdrop is not None and rdrop[j],
+                dupped=dup is not None and dup[j],
             ) -> None:
                 ctrl = self.controller
                 if ctrl is not None and ctrl.consume_drop():
@@ -1092,6 +1471,13 @@ class Network:
                     reply = srv.handle(client, msg)
                 if rt is not None:
                     rt.after_handle(sid)
+                if dupped:
+                    # duplicate delivery — see _FanOut._process
+                    if rt is not None:
+                        rt.before_handle(sid, state)
+                    srv.handle(client, msg)
+                    if rt is not None:
+                        rt.after_handle(sid)
                 if reply is None:
                     state.abandon(sid)
                     return
@@ -1101,12 +1487,18 @@ class Network:
                 self.msg_count += 1
                 self.bytes_sent += rsize
                 self._acct_add(state.acct, 0, 1, rsize)
-                rdelay = lat.server_compute + self._transmit_prop(
-                    self._intern(sid), src_i, rsize, rprop, not rlost
+                rdeliver = not rlost and not (
+                    self._partitions and self._blocked(sid, client)
                 )
-                if rlost:
+                rdelay = lat.server_compute + self._transmit_prop(
+                    self._intern(sid), src_i, rsize, rprop, rdeliver
+                )
+                if not rdeliver:
                     state.abandon(sid)
                     return
+                g = self._gray
+                if g:
+                    rdelay += g.get(sid, 0.0) + g.get(client, 0.0)
                 self.schedule(rdelay, lambda: state.deliver(sid, reply),
                               ("rpl", None, client))
 

@@ -372,6 +372,7 @@ def test_sanitizer_catches_seeded_quorum_off_by_one(monkeypatch):
         dss.run()
 
 
+@pytest.mark.allow_stuck
 def test_sanitizer_catches_bypassing_tag_regression():
     """A buggy server losing its register WITHOUT the tracked-map
     invalidation (dict.__setitem__ bypass — exactly what statemap-bypass

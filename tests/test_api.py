@@ -350,11 +350,13 @@ def test_indexed_update_upgrades_legacy_genesis(via_batch):
     assert s2.read("f").result() == edit
 
 
+@pytest.mark.allow_stuck
 def test_opfuture_result_raises_instead_of_spinning():
     """Regression: with an unbounded daemon keeping the event queue busy and
-    a lost quorum, result() must hit its event budget and raise — not spin
-    forever (Network.run has the same backstop)."""
-    from repro.core.api import OpFuture
+    a lost quorum, result() must blow its virtual-time deadline and raise the
+    typed DeadlineExceeded (ISSUE 10 — was a magic event budget), carrying
+    stuck_ops() diagnostics that name the stranded round."""
+    from repro.net.sim import DeadlineExceeded
 
     dss = _dss(n=6, m=2, seed=53, indexed=True)
     s = dss.session("w")
@@ -362,13 +364,11 @@ def test_opfuture_result_raises_instead_of_spinning():
     dss.start_repair_daemon(period=0.001)
     dss.crash_servers([f"s{i}" for i in range(4)])  # beyond the fault budget
     fut = s.read("f")
-    old = OpFuture.MAX_EVENTS
-    OpFuture.MAX_EVENTS = 20_000
     try:
-        with pytest.raises(RuntimeError, match="did not terminate"):
-            fut.result()
+        with pytest.raises(DeadlineExceeded, match="deadline"):
+            fut.result(deadline=0.5)
+        assert dss.net.stuck_ops(), "the stranded round must be diagnosable"
     finally:
-        OpFuture.MAX_EVENTS = old
         dss.stop_repair_daemon()
 
 

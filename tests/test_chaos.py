@@ -1,0 +1,490 @@
+"""Failure-survival layer (ISSUE 10): RPC deadlines + retransmission with
+backoff/jitter, hedged sends, the richer fault surface (asymmetric
+partitions, gray latency, duplication, crash-recovery), typed
+``QuorumUnavailableError`` liveness failures, and the beyond-quorum
+chaos-storm acceptance gate.
+
+Layers:
+
+* ablation — with ``retry=None`` (the default) NO retry machinery runs:
+  zero retransmits/timeouts and fast/legacy traces stay identical;
+* RPC tier — deadline timers retransmit to the laggards, ride out
+  transient crashes, and surface a typed ``RpcTimeout`` (a
+  ``QuorumUnavailableError``) when the budget is exhausted;
+* fault surface — partitions (asymmetric / bidirectional / wildcard /
+  heal), gray slowdowns, message duplication, crash-recovery wipes,
+  all deterministic and engine-identical;
+* protocol/API tier — phase retries surface ``QuorumUnavailableError``
+  on Session futures instead of hanging;
+* acceptance — a seeded beyond-quorum ``CrashStorm`` under sanitizer +
+  race tracker: 0 stuck ops, >= 99% availability after recovery, every
+  unrecoverable op failing typed within its deadline.
+"""
+import pytest
+
+from repro.core import (
+    DSS,
+    DSSParams,
+    CrashStorm,
+    QuorumUnavailableError,
+    RetryPolicy,
+    WorkloadGen,
+    WorkloadSpec,
+)
+from repro.net.sim import (
+    RPC,
+    FaultEvent,
+    FaultPlan,
+    LatencyModel,
+    Network,
+    RpcTimeout,
+    Server,
+)
+
+
+class Echo(Server):
+    def __init__(self, sid):
+        super().__init__(sid)
+        self.count = 0
+
+    def handle(self, sender, msg):
+        self.count += 1
+        return ("echo", self.sid, msg)
+
+
+def _mknet(fast=True, n=3, seed=2, retry=None, **lat):
+    net = Network(seed=seed, latency=LatencyModel(**lat), fast=fast)
+    net.retry = retry
+    for i in range(n):
+        net.add_server(Echo(f"s{i}"))
+    return net
+
+
+def _fingerprint(net):
+    return (
+        round(net.now, 12),
+        net.events_processed,
+        net.rpc_rounds,
+        net.msg_count,
+        net.bytes_sent,
+        net.client_counters,
+        net.retransmits,
+        net.rpc_timeouts,
+        net.hedges,
+    )
+
+
+# ------------------------------------------------------------- ablation
+def _workload_report(fast, *, retry=None, storms=(), seed=11):
+    dss = DSS(DSSParams(
+        algorithm="coaresecf", n_servers=6, parity_m=2, seed=5,
+        min_block=256, avg_block=512, max_block=2048,
+        indexed=True, batched=True, fast_net=fast, retry=retry,
+    ))
+    spec = WorkloadSpec(sessions=30, files=8, file_size=512,
+                        read_fraction=0.7, ops_per_session=2, storms=storms)
+    rep = WorkloadGen(spec, seed=seed).run(dss)
+    return rep, _fingerprint(dss.net)
+
+
+def test_retry_disabled_consumes_nothing():
+    """The ablation contract: ``retry=None`` arms no timers, draws no RNG,
+    reserves no sequence numbers — the retry counters stay exactly zero
+    and fast/legacy traces agree (byte-identity with pre-feature HEAD is
+    pinned by the untouched bench-smoke baselines)."""
+    a = _workload_report(True)
+    b = _workload_report(False)
+    assert a == b
+    rep, fp = a
+    assert rep["retries"] == {"retransmits": 0, "rpc_timeouts": 0,
+                              "hedges": 0, "op_retries": 0}
+    assert fp[-3:] == (0, 0, 0)
+
+
+def test_trace_identity_with_retries_enabled():
+    """Stronger than the ISSUE asks: even WITH the retry machinery armed
+    and a beyond-quorum storm landing, both engines replay the identical
+    trace — timers, retransmits and jitter draws are engine-independent."""
+    storms = (CrashStorm(at=0.05, frac=1.0, duration=0.05,
+                         beyond_quorum=True),)
+    a = _workload_report(True, retry=RetryPolicy(), storms=storms, seed=13)
+    b = _workload_report(False, retry=RetryPolicy(), storms=storms, seed=13)
+    assert a == b
+
+
+# ------------------------------------------------------------- RPC tier
+def _timeout_trial(fast):
+    net = _mknet(fast, n=3, retry=RetryPolicy(
+        rpc_timeout=5e-3, backoff=2.0, jitter=0.25, max_attempts=3))
+    for s in list(net.servers):
+        net.crash(s)
+
+    def op():
+        try:
+            yield RPC(dests=tuple(net.servers), msg=("ping",), need=2)
+        except RpcTimeout as e:
+            return ("timed-out", net.now, str(e))
+        return "completed"
+
+    fut = net.spawn(op(), client="c")
+    net.run()
+    assert fut.done
+    return fut.result, net.retransmits, net.rpc_timeouts
+
+
+def test_rpc_timeout_is_typed_and_engine_identical():
+    a, b = _timeout_trial(True), _timeout_trial(False)
+    assert a == b
+    (kind, t, msg), retransmits, timeouts = a
+    assert kind == "timed-out"
+    assert retransmits == 2 and timeouts == 1  # 3 attempts, then the throw
+    # cumulative backoff: 5 + 10 + 20 ms, plus <= 25% jitter per attempt
+    assert 0.035 <= t <= 0.035 * 1.25
+    assert "0/2" in msg or "need" in msg
+
+
+def test_rpc_timeout_is_a_quorum_unavailable_error():
+    assert issubclass(RpcTimeout, QuorumUnavailableError)
+
+
+def _transient_crash_trial(fast):
+    net = _mknet(fast, n=3, retry=RetryPolicy(
+        rpc_timeout=10e-3, jitter=0.0, max_attempts=4))
+    net.crash("s1")
+    net.crash("s2")
+
+    def op():
+        replies = yield RPC(dests=("s0", "s1", "s2"), msg=("ping",), need=3)
+        return sorted(replies)
+
+    fut = net.spawn(op(), client="c")
+    # recovery lands between attempt 2 (~10ms) and attempt 3 (~30ms): the
+    # round must ride it out via retransmission instead of wedging
+    net.schedule(0.02, lambda: (net.recover("s1"), net.recover("s2")))
+    net.run()
+    assert fut.done
+    return fut.result, net.retransmits, _fingerprint(net)
+
+
+def test_retransmit_rides_out_transient_crash():
+    a, b = _transient_crash_trial(True), _transient_crash_trial(False)
+    assert a == b
+    result, retransmits, _ = a
+    assert result == ["s0", "s1", "s2"]
+    assert retransmits >= 2  # the laggards were re-sent to after recovery
+
+
+def test_retransmit_goes_only_to_laggards():
+    net = _mknet(True, n=3, retry=RetryPolicy(
+        rpc_timeout=10e-3, jitter=0.0, max_attempts=4))
+    net.crash("s2")
+
+    def op():
+        replies = yield RPC(dests=("s0", "s1", "s2"), msg=("ping",), need=3)
+        return sorted(replies)
+
+    net.spawn(op(), client="c")
+    net.schedule(0.02, lambda: net.recover("s2"))
+    net.run()
+    # s0/s1 answered attempt 1; their handlers never saw a duplicate
+    assert net.servers["s0"].count == 1
+    assert net.servers["s1"].count == 1
+    assert net.servers["s2"].count == 1  # only the post-recovery retransmit
+
+
+def _hedge_trial(fast):
+    net = _mknet(fast, n=3, retry=RetryPolicy(
+        rpc_timeout=50e-3, jitter=0.0, max_attempts=2, hedge_after=5e-3))
+    # gray straggler: 0.015 each way lags the reply past hedge_after but
+    # inside rpc_timeout, so the hedge fires and no retransmit does
+    net.slow("s2", 0.015)
+
+    def op():
+        replies = yield RPC(dests=("s0", "s1", "s2"), msg=("ping",), need=3)
+        return sorted(replies)
+
+    fut = net.spawn(op(), client="c")
+    net.run()
+    assert fut.done
+    return fut.result, net.hedges, net.retransmits, _fingerprint(net)
+
+
+def test_hedged_send_fires_once_without_burning_attempts():
+    a, b = _hedge_trial(True), _hedge_trial(False)
+    assert a == b
+    result, hedges, retransmits, _ = a
+    assert result == ["s0", "s1", "s2"]
+    assert hedges == 1 and retransmits == 0
+
+
+# --------------------------------------------------------- fault surface
+def test_partition_asymmetric_request_vs_reply_path():
+    for fast in (True, False):
+        # request path: c -> s0 blocked; the round completes on s1/s2
+        net = _mknet(fast, n=3)
+        net.partition("c", "s0")
+
+        def op(net=net):
+            replies = yield RPC(dests=tuple(net.servers),
+                                msg=("ping",), need=2)
+            return sorted(replies)
+
+        fut = net.spawn(op(), client="c")
+        net.run()
+        assert fut.result == ["s1", "s2"]
+        assert net.servers["s0"].count == 0  # request never arrived
+
+        # reply path: s0 handled the message but its reply is blocked
+        net2 = _mknet(fast, n=3)
+        net2.partition("s0", "c")
+        fut2 = net2.spawn(op(net2), client="c")
+        net2.run()
+        assert fut2.result == ["s1", "s2"]
+        assert net2.servers["s0"].count == 1  # handled, reply lost
+
+
+def test_partition_bidir_wildcard_and_heal():
+    net = _mknet(True, n=3, retry=RetryPolicy(rpc_timeout=10e-3, jitter=0.0,
+                                              max_attempts=6))
+    net.partition("c", "s1", bidir=True)
+    assert net._blocked("c", "s1") and net._blocked("s1", "c")
+    net.partition("s2", "*")  # s2 cannot send to anyone
+    assert net._blocked("s2", "c") and net._blocked("s2", "s0")
+    assert not net._blocked("c", "s2")  # requests still reach it
+
+    def op():
+        replies = yield RPC(dests=tuple(net.servers), msg=("ping",), need=3)
+        return sorted(replies)
+
+    fut = net.spawn(op(), client="c")
+    net.schedule(0.025, net.heal)  # no args: clear every rule
+    net.run()
+    assert fut.result == ["s0", "s1", "s2"]
+    assert not net._partitions
+    assert net.retransmits > 0  # the healed round finished via retransmit
+
+
+def test_partition_heal_single_rule():
+    net = Network(seed=0)
+    net.partition("a", "b")
+    net.partition("a", "c")
+    net.heal("a", "b")
+    assert not net._blocked("a", "b") and net._blocked("a", "c")
+
+
+def _gray_trial(fast):
+    net = _mknet(fast, n=3, seed=7)
+    net.slow("s1", 0.25)
+
+    def op():
+        replies = yield RPC(dests=tuple(net.servers), msg=("ping",), need=3)
+        return len(replies)
+
+    net.spawn(op(), client="c")
+    net.run()
+    return _fingerprint(net)
+
+
+def test_gray_slowdown_deterministic_and_engine_identical():
+    a = _gray_trial(True)
+    assert a == _gray_trial(True) == _gray_trial(False)
+    assert a[0] > 0.25  # the straggler's reply bounds the need=3 round
+    net = _mknet(True, n=3, seed=7)
+    net.slow("s1", 0.25)
+    net.unslow("s1")
+    assert not net._gray
+
+
+def _dup_trial(fast):
+    net = _mknet(fast, n=3, seed=4, dup_prob=1.0)
+
+    def op(k):
+        replies = yield RPC(dests=tuple(net.servers), msg=("ping", k), need=3)
+        return sorted(replies)
+
+    futs = [net.spawn(op(k), client="c") for k in range(5)]
+    net.run()
+    return [f.result for f in futs], [s.count for s in net.servers.values()], \
+        _fingerprint(net)
+
+
+def test_duplication_reaches_handlers_but_never_double_counts():
+    a, b = _dup_trial(True), _dup_trial(False)
+    assert a == b
+    results, counts, _ = a
+    assert all(r == ["s0", "s1", "s2"] for r in results)
+    assert counts == [10, 10, 10]  # every message handled exactly twice
+
+
+def test_crash_recovery_wipes_volatile_reply_cache():
+    """Satellite (b): ``recover(wipe=True)`` must clear the identity reply
+    cache — a recovered replica serving a reply memoized before the crash
+    is the gray failure this pins. State is mutated through raw
+    ``dict.__setitem__`` (bypassing the tracked-map invalidation hook) to
+    model divergence the cache cannot observe across the crash."""
+    from repro.core.server import StorageServer
+
+    def primed():
+        net = Network(seed=0)
+        srv = StorageServer("s0")
+        net.add_server(srv)
+        srv.handle("w", ("ec-put", "obj", 0, (1, "w"), b"frag-a", 8))
+        stale = srv.handle("c", ("ec-query", "obj", 0, None))
+        assert srv.handle("c", ("ec-query", "obj", 0, None)) is stale
+        dict.__setitem__(srv.ec, ("obj", 0), {(2, "w"): (b"frag-b", 8)})
+        net.crash("s0")
+        return net, srv, stale
+
+    # crash-stop semantics preserved: wipe=False keeps the (stale) cache
+    net, srv, stale = primed()
+    net.recover("s0", wipe=False)
+    assert srv.handle("c", ("ec-query", "obj", 0, None)) is stale
+
+    # crash-recovery: the wipe guarantees a fresh answer post-recovery
+    net, srv, stale = primed()
+    net.recover("s0")  # wipe=True is the default
+    fresh = srv.handle("c", ("ec-query", "obj", 0, None))
+    assert fresh is not stale
+    assert (2, "w") in dict(fresh[1])
+
+
+def test_storage_recover_keeps_durable_state():
+    from repro.core.server import StorageServer
+
+    srv = StorageServer("s0")
+    srv.handle("w", ("abd-put", "f", 0, (3, "w"), b"v"))
+    srv.on_recover()
+    assert srv.abd[("f", 0)] == ((3, "w"), b"v")  # durable, survives
+
+
+def test_fault_plan_applies_and_unwinds():
+    net = _mknet(True, n=3)
+    FaultPlan(events=(
+        FaultEvent(at=0.01, kind="crash", target="s0"),
+        FaultEvent(at=0.02, kind="slow", target="s1", extra=0.25),
+        FaultEvent(at=0.03, kind="partition", target="c", peer="s2"),
+        FaultEvent(at=0.04, kind="recover", target="s0"),
+        FaultEvent(at=0.05, kind="unslow", target="s1"),
+        FaultEvent(at=0.06, kind="heal-all"),
+    )).apply(net)
+    seen = []
+    net.schedule(0.035, lambda: seen.append((
+        net.servers["s0"].crashed, dict(net._gray), set(net._partitions))))
+    net.run()
+    assert seen == [(True, {"s1": 0.25}, {("c", "s2")})]
+    assert not net.servers["s0"].crashed
+    assert not net._gray and not net._partitions
+
+
+def test_fault_plan_rejects_unknown_kind():
+    net = Network(seed=0)
+    FaultPlan(events=(FaultEvent(at=0.0, kind="meteor"),)).apply(net)
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        net.run()
+
+
+@pytest.mark.allow_stuck
+def test_stuck_ops_diagnostics_shape():
+    """Satellite (a): a wedged quorum round is visible — op id, kind,
+    client, the need, and exactly which servers did reply."""
+    net = _mknet(True, n=3)  # no retry: the round wedges
+    net.crash("s1")
+    net.crash("s2")
+
+    def op():
+        yield RPC(dests=tuple(net.servers), msg=("ping",), need=2)
+
+    net.spawn(op(), kind="probe", client="c9")
+    net.run()
+    [stuck] = net.stuck_ops()
+    assert stuck["kind"] == "probe" and stuck["client"] == "c9"
+    assert stuck["need"] == 2 and stuck["have"] == ["s0"]
+    assert stuck["alive_mode"] is False
+
+
+def test_retry_clears_stuck_ops():
+    net = _mknet(True, n=3, retry=RetryPolicy(rpc_timeout=5e-3,
+                                              max_attempts=2))
+    net.crash("s1")
+    net.crash("s2")
+
+    def op():
+        try:
+            yield RPC(dests=tuple(net.servers), msg=("ping",), need=2)
+        except RpcTimeout:
+            return "failed-typed"
+        return "ok"
+
+    fut = net.spawn(op(), client="c")
+    net.run()
+    assert fut.result == "failed-typed"
+    assert net.stuck_ops() == []  # timed-out rounds are not leaks
+
+
+# ------------------------------------------------------ protocol/API tier
+def test_session_write_fails_typed_when_quorum_gone():
+    """Phase retries exhaust against a permanently lost quorum and the
+    Session future carries ``QuorumUnavailableError`` — never a hang, and
+    never an untyped exception."""
+    dss = DSS(DSSParams(
+        algorithm="coaresabd", n_servers=3, seed=2,
+        retry=RetryPolicy(rpc_timeout=5e-3, jitter=0.0, max_attempts=2,
+                          phase_retries=1, phase_backoff=1e-3,
+                          op_deadline=5.0),
+    ))
+    sess = dss.session("c1")
+    sess.write("f", b"v1").result()
+    dss.crash_servers(["s0", "s1", "s2"])
+    fut = sess.write("f", b"v2")
+    with pytest.raises(QuorumUnavailableError):
+        fut.result()
+    assert fut.exception() is not None
+    assert dss.net.now < 5.0  # failed within the deadline, not at it
+    assert dss.net.op_retries >= 1  # the phase tier did re-issue
+
+
+def test_session_recovers_after_transient_beyond_quorum_crash():
+    dss = DSS(DSSParams(
+        algorithm="coaresecf", n_servers=5, parity_m=2, seed=3,
+        retry=RetryPolicy(jitter=0.0),
+    ))
+    sess = dss.session("c1")
+    sess.write("f", b"x" * 256).result()
+    dss.crash_servers([f"s{i}" for i in range(5)])
+    dss.net.schedule(0.03, lambda: dss.recover_servers(
+        [f"s{i}" for i in range(5)]))
+    fut = sess.read("f")
+    assert fut.result() == b"x" * 256  # rode out the full blackout
+    assert fut.stats.retries > 0
+
+
+# ------------------------------------------------------------- acceptance
+def test_beyond_quorum_storm_acceptance():
+    """The ISSUE 10 acceptance gate, as a test: a seeded beyond-quorum
+    storm (every server crashes, then recovers) under sanitizer + race
+    tracker. Zero stuck ops, zero stuck RPC rounds, >= 99% availability
+    after recovery, and every failure typed ``QuorumUnavailableError``."""
+    dss = DSS(DSSParams(
+        algorithm="coaresecf", n_servers=5, parity_m=2, seed=7,
+        min_block=256, avg_block=512, max_block=2048,
+        indexed=True, batched=True, sanitize=True, racecheck=True,
+        retry=RetryPolicy(),
+    ))
+    spec = WorkloadSpec(
+        sessions=40, files=8, file_size=512, read_fraction=0.6,
+        ops_per_session=2,
+        storms=(CrashStorm(at=0.05, frac=1.0, duration=0.05,
+                           beyond_quorum=True),),
+    )
+    rep = WorkloadGen(spec, seed=23).run(dss)
+    assert rep["ops"] == 80
+    assert rep["ops_stuck"] == 0
+    assert rep["stuck_rpcs"] == 0
+    assert rep["ops_failed"] == rep["quorum_unavailable"]  # all typed
+    assert rep["availability_after_recovery"] >= 0.99
+    assert rep["availability"] >= 0.9
+    assert rep["retries"]["retransmits"] > 0  # the storm was survived, not dodged
+    # the sanitizer raises on any violation, so a populated report here
+    # means every fan-out/reply passed the live checks
+    assert rep["sanitizer"]["checks"] > 0
+    assert rep["races"]["checks"] > 0

@@ -99,6 +99,7 @@ def test_ec_tolerates_floor_n_minus_k_over_2():
     assert dss.net.run_op(r.read("f"), client="r") == b"durable" * 50
 
 
+@pytest.mark.allow_stuck
 def test_ec_blocks_beyond_tolerance():
     dss = _dss("coaresec", n=6, parity_m=2)
     w, r = dss.client("w"), dss.client("r")

@@ -110,6 +110,7 @@ def test_conflict_relation():
 
 
 # --------------------------------------------------------------- explorer
+@pytest.mark.allow_stuck
 def test_dfs_exhausts_tiny_config_clean():
     """Bounded exhaustive DFS over the 3-server/2-client/1-block scenario
     with crash AND drop as schedulable choices: no violation anywhere, and
@@ -191,6 +192,33 @@ def test_dfs_finds_unguarded_put_write_write_race():
     assert "regressed abd state" in b["violation"]["message"]
 
 
+def test_explorer_finds_retry_duplicate_write_regression():
+    """ISSUE 10: a retransmitted abd-put applied without duplicate
+    suppression. Needs the retry machinery armed (cfg.retry=True) plus a
+    crash (thins the quorum) and a dropped ack (forces the retransmit);
+    the duplicate's blind re-apply can land after a rival writer's newer
+    tag and regress the register — an UNORDERED write-write race."""
+    cfg = ExploreConfig.for_scenario(
+        "ww", fault="retry-dup-write", mode="pct", crash_budget=1,
+        drop_budget=1, retry=True, budget=500,
+    )
+    b = _assert_found_and_replays(cfg, "RaceError")
+    assert "regressed abd state" in b["violation"]["message"]
+
+
+def test_retry_duplicates_suppressed_on_head():
+    """The flip side of the control: with the SAME retry config but no
+    fault, the real servers' tag guard suppresses every retransmitted
+    duplicate — the sweep stays clean even while retransmits fire."""
+    cfg = ExploreConfig.for_scenario(
+        "ww", mode="pct", crash_budget=1, drop_budget=1, retry=True,
+        budget=120, stop_on_first=False,
+    )
+    res = explore(cfg)
+    assert not res.violations, res.violations[:1]
+    assert res.schedules == 120
+
+
 def test_fault_hooks_restore_handlers():
     before_put = StorageServer._DISPATCH["abd-put"]
     before_putb = StorageServer._DISPATCH["abd-put-batch"]
@@ -198,6 +226,8 @@ def test_fault_hooks_restore_handlers():
         ("early-read-resume", {}),
         ("ack-rollback", {"drop_budget": 1}),
         ("unguarded-put", {}),
+        ("retry-dup-write", {"crash_budget": 1, "drop_budget": 1,
+                             "retry": True}),
     ):
         run_schedule(ExploreConfig.for_scenario("wr", fault=fault, **kw))
         assert StorageServer._DISPATCH["abd-put"] is before_put

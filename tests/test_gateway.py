@@ -301,3 +301,46 @@ def test_empty_file_rides_the_merged_batch():
     s.write("full", doc)
     f1, f2 = s.read("empty"), s.read("full")
     assert gather(f1, f2) == [b"", doc]
+
+
+# ------------------------------------------- mid-flight crash survival
+def test_gateway_stat_rider_survives_mid_flight_crash(monkeypatch):
+    """ISSUE 10 satellite (c): alive-mode x gateway under a mid-flight
+    crash. Two riders' stats merge into one round whose final phase is the
+    alive-mode ``margin-batch`` probe; a counted destination crashing
+    between the gateway's merged issue and its reply must be abandoned
+    (ISSUE 7 semantics THROUGH the gateway tier) so both riders still
+    resolve — with the probe's ``alive`` count reflecting the survivors."""
+    from repro.core.server import StorageServer
+
+    dss = _dss(indexed=True, seed=17)
+    net = dss.net
+    boot = dss.session("boot")
+    assert boot.write("f", _blob(3, 2000)).result()["success"]
+    gw = dss.gateway()
+    a, b = gw.session("a"), gw.session("b")
+
+    crashed: list[str] = []
+    handled: list[str] = []
+    real = StorageServer.handle
+
+    def spy(self, sender, msg):
+        # on the FIRST probe arrival, crash a counted destination that has
+        # not replied yet: its arrival is now mid-flight on a dead server
+        if msg and msg[0] == "margin-batch":
+            handled.append(self.sid)
+            if not crashed:
+                victim = next(s for s in net.servers
+                              if s != self.sid and s not in handled)
+                crashed.append(victim)
+                net.crash(victim)
+        return real(self, sender, msg)
+
+    monkeypatch.setattr(StorageServer, "handle", spy)
+    fa, fb = a.stat("f"), b.stat("f")
+    ra, rb = gather(fa, fb)
+    assert crashed and crashed[0] not in handled  # it really was mid-flight
+    assert ra == rb  # multicast from the one merged round
+    assert ra["margin"] >= 0  # 6 servers, m=2 parity: one loss survivable
+    assert fa.stats.batched_with == 2
+    assert net.stuck_ops() == []

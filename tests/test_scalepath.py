@@ -5,6 +5,7 @@ isolation, alive-mode abandonment)."""
 import math
 
 import numpy as np
+import pytest
 
 from repro.core import DSS, DSSParams, CrashStorm, WorkloadGen, WorkloadSpec
 from repro.net.codec import SizingMemo, wire_size
@@ -89,6 +90,7 @@ def _drop_trial(fast):
     return ([(f.done, f.result) for f in futs], _net_fingerprint(net))
 
 
+@pytest.mark.allow_stuck
 def test_trace_identity_with_drops():
     # drop_prob > 0: both engines burn the same drop stream and lose the
     # same messages; stuck-vs-done status per op must agree too.

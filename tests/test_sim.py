@@ -1,5 +1,6 @@
 """Network simulator behaviour tests."""
 import numpy as np
+import pytest
 
 from repro.net.sim import RPC, LatencyModel, Network, Server, Sleep, nbytes
 
@@ -44,6 +45,7 @@ def test_crashed_servers_do_not_reply():
     assert net.run_op(op()) == ["s2", "s3", "s4"]
 
 
+@pytest.mark.allow_stuck
 def test_op_blocks_without_quorum():
     net = _mknet(3)
     net.crash("s0")
